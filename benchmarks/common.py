@@ -1,0 +1,213 @@
+"""Shared benchmark harness.
+
+Reproduces the paper's experimental axes at CPU scale:
+
+* **Quality** — real training of a small transformer LM / LSTM / ResNet on
+  deterministic synthetic tasks, under every compressor, with the paper's
+  W-worker semantics simulated exactly: the per-worker gradient + compressor
+  step runs under ``jax.vmap(axis_name="data")`` so every ``pmean``/``psum``
+  inside the compressors aggregates over simulated workers — faithful for
+  non-linear schemes (sign, top-K, Signum majority vote) too.
+
+* **Bytes** — exact analytic accounting (identical to the paper's tables).
+
+* **Time** — coding/decoding time is *measured* on this host; communication
+  time is *modeled* with the standard α-β cost model at the paper's two
+  backends (NCCL-like on 10 Gbit/s, GLOO-like effective 2.5 Gbit/s):
+      all-reduce : 2·(W−1)/W · bytes / bw
+      all-gather : (W−1) · bytes / bw   (and decode cost scales with W)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import error_feedback as ef_lib
+from repro.core.compressors import Compressor
+from repro.core.dist import MeshCtx
+from repro.data.synthetic import MarkovLM
+
+SIM_AXIS = "data"
+SIM_CTX = MeshCtx(data_axes=(SIM_AXIS,))
+
+
+@dataclasses.dataclass
+class LMSpec:
+    vocab: int = 256
+    d_model: int = 128
+    layers: int = 2
+    heads: int = 4
+    seq: int = 64
+    batch_per_worker: int = 4
+    workers: int = 4
+    steps: int = 150
+    lr: float = 0.1
+    momentum: float = 0.9
+    seed: int = 0
+    # order-1 Markov with 8 token clusters: learnable within the step budget
+    # and with genuinely low-rank gradients (the paper's premise, §2) —
+    # order-2 hash transitions are a memorization cliff no compressor (nor
+    # uncompressed SGD) can descend in this budget.
+    order: int = 1
+    clusters: int = 8
+
+
+def _make_cfg(spec: LMSpec):
+    from repro.configs.base import LayerSlot, ModelConfig
+
+    return ModelConfig(
+        name="bench-lm", arch_type="dense", num_layers=spec.layers,
+        d_model=spec.d_model, num_heads=spec.heads, num_kv_heads=spec.heads,
+        head_dim=spec.d_model // spec.heads, d_ff=spec.d_model * 4,
+        vocab_size=spec.vocab, rope_theta=10000.0,
+        slots=(LayerSlot("attn", "dense"),))
+
+
+def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
+             eval_batches: int = 8):
+    """Train the benchmark LM under EF + ``compressor`` with W simulated
+    workers.  Returns a result dict."""
+    from repro.core.dist import SINGLE
+    from repro.models import model as model_lib
+
+    cfg = _make_cfg(spec)
+    key = jax.random.key(spec.seed)
+    params = model_lib.init(key, cfg, model_shards=1)
+    specs = model_lib.mspecs(cfg)
+    state = ef_lib.init_state(compressor, params, specs, key)
+    # per-worker error buffers: broadcast zeros over the worker axis
+    state = ef_lib.EFState(
+        error=jax.tree_util.tree_map(
+            lambda e: jnp.zeros((spec.workers,) + e.shape, e.dtype), state.error),
+        momentum=state.momentum, comp=state.comp, step=state.step)
+
+    data = MarkovLM(vocab=spec.vocab, seed=spec.seed, order=spec.order,
+                    clusters=spec.clusters)
+    it = data.batches(spec.batch_per_worker * spec.workers, spec.seq)
+    eval_data = []
+    for i in range(eval_batches):
+        b = data.sample(32, spec.seq, step=10_000 + i)
+        eval_data.append({"tokens": jnp.asarray(b[:, :-1]),
+                          "labels": jnp.asarray(b[:, 1:])})
+
+    def worker_step(params, err, batch, comp_state, step_idx, key):
+        def loss_fn(p):
+            return model_lib.loss_fn(p, batch, cfg, SINGLE, q_chunk=32,
+                                     remat=False)
+
+        grads, metrics = jax.grad(loss_fn, has_aux=True)(params)
+        st = ef_lib.EFState(error=err, momentum=None, comp=comp_state,
+                            step=step_idx)
+        deltas = jax.tree_util.tree_map(jnp.add, grads, err)
+        out = compressor.step(deltas, comp_state,
+                              specs, ctx=SIM_CTX, key=key)
+        new_err = jax.tree_util.tree_map(jnp.subtract, deltas, out.recon)
+        return out.agg, out.state, new_err, metrics["lm_loss"]
+
+    @jax.jit
+    def train_step(params, state, batch, key):
+        key = jax.random.fold_in(key, state.step)
+        bw = jax.tree_util.tree_map(
+            lambda x: x.reshape((spec.workers, spec.batch_per_worker) + x.shape[1:]),
+            batch)
+        agg, comp_state, new_err, losses = jax.vmap(
+            worker_step, in_axes=(None, 0, 0, None, None, None),
+            out_axes=0, axis_name=SIM_AXIS,
+        )(params, state.error, bw, state.comp, state.step, key)
+        # agg / comp_state are pmean'd inside ⇒ identical on every worker
+        agg = jax.tree_util.tree_map(lambda x: x[0], agg)
+        comp_state = jax.tree_util.tree_map(lambda x: x[0], comp_state)
+        new_m = jax.tree_util.tree_map(
+            lambda m, d: spec.momentum * m + d, state.momentum, agg)
+        new_p = jax.tree_util.tree_map(
+            lambda x, d, m: x - spec.lr * (d + m), params, agg, new_m)
+        new_state = ef_lib.EFState(error=new_err, momentum=new_m,
+                                   comp=comp_state, step=state.step + 1)
+        return new_p, new_state, losses
+
+    @jax.jit
+    def eval_loss(params, batch):
+        loss, _ = model_lib.loss_fn(params, batch, cfg, SINGLE, q_chunk=32,
+                                    remat=False)
+        return loss
+
+    key_run = jax.random.key(123)
+    t0 = time.time()
+    bits = None
+    for i in range(spec.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, state, losses = train_step(params, state, batch, key_run)
+        if bits is None:
+            shapes = jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+            probe = compressor.step(
+                jax.tree_util.tree_map(jnp.zeros_like, params),
+                compressor.init(shapes, specs, key_run), specs, key=key_run)
+            bits = probe.bits_per_worker
+    train_time = time.time() - t0
+
+    ev = float(np.mean([float(eval_loss(params, b)) for b in eval_data]))
+    return {
+        "compressor": compressor.name,
+        "eval_loss": ev,
+        "eval_ppl": float(np.exp(ev)),
+        "bits_per_worker_per_step": int(bits),
+        "allreduce": compressor.allreduce,
+        "train_time_s": train_time,
+        "steps": spec.steps,
+        "workers": spec.workers,
+    }
+
+
+# ---------------------------------------------------------------------------
+# communication model (paper Appendix B cluster: 10 Gbit/s ethernet)
+# ---------------------------------------------------------------------------
+
+BW = {"nccl_10gbit": 10e9 / 8, "gloo_10gbit": 2.5e9 / 8}
+LATENCY = {"nccl_10gbit": 30e-6, "gloo_10gbit": 150e-6}
+
+
+def comm_time(bytes_per_worker: float, workers: int, allreduce: bool,
+              backend: str = "nccl_10gbit") -> float:
+    """Seconds to aggregate one step's messages among W workers."""
+    import math
+
+    bw = BW[backend]
+    lat = LATENCY[backend]
+    if workers <= 1:
+        return 0.0
+    if allreduce:
+        rounds = math.ceil(math.log2(workers))
+        return 2 * (workers - 1) / workers * bytes_per_worker / bw + lat * rounds
+    # all-gather: every worker receives (W−1) messages
+    return (workers - 1) * bytes_per_worker / bw + lat * (workers - 1)
+
+
+def measure_coding_time(compressor: Compressor, params, specs,
+                        iters: int = 5) -> float:
+    """Measured compress+decompress wall time per step on this host."""
+    key = jax.random.key(0)
+    shapes = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+    state = compressor.init(shapes, specs, key)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.ones_like(p) * 0.01, params)
+
+    stepf = jax.jit(lambda g, s, k: compressor.step(g, s, specs, key=k).agg)
+    out = stepf(grads, state, key)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for i in range(iters):
+        out = stepf(grads, state, jax.random.fold_in(key, i))
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def bytes_per_epoch_mb(bits_per_step: int, steps_per_epoch: int) -> float:
+    return bits_per_step / 8 / 1e6 * steps_per_epoch

@@ -1,0 +1,162 @@
+"""§Perf hillclimbing driver: named iterations over the three chosen
+(arch × shape) pairs.  Each iteration re-lowers + re-compiles on the
+production 16×16 mesh and records the three roofline terms.
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb [--only PAIR]
+
+Results land in experiments/perf/<pair>__<label>.json; the table for
+EXPERIMENTS.md §Perf comes from --report.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import glob
+import json
+
+# (pair, label, hypothesis, cfg_overrides, hyper_overrides)
+ITERATIONS = [
+    # ---- llama3-8b × train_4k: the paper-representative pair -------------
+    ("llama3_8b/train_4k", "baseline",
+     "paper-faithful: fp32, Gram-Schmidt, remat on, rank 2", {}, {}),
+    ("llama3_8b/train_4k", "remat_off",
+     "footprint is 0.2 GiB/chip of 16 GB - remat recompute reads/flops are "
+     "pure waste; predict memory term -25%%, useful -> ~1.0", {},
+     {"remat": False}),
+    ("llama3_8b/train_4k", "bf16",
+     "bf16 params+activations halve every byte moved (HBM and wire); "
+     "predict memory and collective terms both ~-50%%",
+     {"dtype": "bfloat16"}, {}),
+    ("llama3_8b/train_4k", "bf16_remat_off",
+     "combine the two confirmed wins", {"dtype": "bfloat16"},
+     {"remat": False}),
+    ("llama3_8b/train_4k", "bf16_remat_off_cholqr",
+     "CholeskyQR replaces the sequential rank-2 Gram-Schmidt with two "
+     "tall-skinny matmuls (MXU-native); roofline terms ~unchanged (r=2 is "
+     "tiny) but removes the serial dependency chain",
+     {"dtype": "bfloat16"}, {"remat": False, "orthogonalizer": "cholesky_qr"}),
+
+    # ---- qwen3-moe-30b-a3b × train_4k: worst roofline fraction -----------
+    ("qwen3_moe_30b_a3b/train_4k", "baseline",
+     "paper-faithful baseline", {}, {}),
+    ("qwen3_moe_30b_a3b/train_4k", "remat_off",
+     "remat recompute re-reads every expert weight (30B params) twice; "
+     "predict memory term -30%%", {}, {"remat": False}),
+    ("qwen3_moe_30b_a3b/train_4k", "bf16",
+     "expert weights dominate bytes; bf16 halves them", {"dtype": "bfloat16"},
+     {}),
+    ("qwen3_moe_30b_a3b/train_4k", "bf16_remat_off",
+     "combine", {"dtype": "bfloat16"}, {"remat": False}),
+    ("qwen3_moe_30b_a3b/train_4k", "bf16_remat_off_cap10",
+     "capacity factor 1.25 -> 1.0 shrinks dispatch buffers and dropped-token "
+     "compute by 20%%; predict small memory win on top",
+     {"dtype": "bfloat16", "moe_capacity_factor": 1.0}, {"remat": False}),
+
+    # ---- codeqwen1.5-7b × prefill_32k: most collective-bound -------------
+    ("codeqwen15_7b/prefill_32k", "baseline",
+     "paper-faithful baseline (Megatron TP with K/V all-gather)", {}, {}),
+    ("codeqwen15_7b/prefill_32k", "local_kv",
+     "kv=32 heads shard evenly over 16 chips: q heads only need local kv "
+     "heads, so skip the 68.7 GB K/V all-gather in forward and emit the "
+     "cache via one all-to-all (result 1/16 the gather); predict "
+     "collective term ~-45%%", {"tp_local_kv": True}, {}),
+    ("codeqwen15_7b/prefill_32k", "local_kv_bf16",
+     "halve the remaining psum(model) wire bytes too",
+     {"tp_local_kv": True, "dtype": "bfloat16"}, {}),
+
+    # ---- round 2: attack the new dominant terms (fp32 — bf16 refuted on
+    # the CPU-lowered artifact, see the iteration log) ----------------------
+    ("llama3_8b/train_4k", "remat_off_qc2048",
+     "4x larger flash q-chunks -> 4x fewer scan steps over scores; "
+     "predict small memory-term win from fewer intermediate spills", {},
+     {"remat": False, "q_chunk": 2048}),
+    ("llama3_8b/train_4k", "remat_off_unroll4",
+     "unroll 4 layers per scan step: cross-layer fusion opportunities; "
+     "predict <=5%% memory win at 4x compile time", {},
+     {"remat": False, "unroll": 4}),
+    ("qwen3_moe_30b_a3b/train_4k", "remat_off_cap10",
+     "isolate capacity 1.0 without bf16 (bf16 refuted): dispatch buffers "
+     "and expert flops shrink 20%%", {"moe_capacity_factor": 1.0},
+     {"remat": False}),
+    ("codeqwen15_7b/prefill_32k", "local_kv_qc2048",
+     "dominant flipped to memory (1.55s): larger q chunks cut score-tensor "
+     "spills in the 32k-long flash loop", {"tp_local_kv": True},
+     {"q_chunk": 2048}),
+
+    # ---- bonus pair 4: qwen3-moe decode_32k (production serving regime;
+    # useful=0.09, memory 99.5ms vs ~10ms napkin) --------------------------
+    ("qwen3_moe_30b_a3b/decode_32k", "baseline",
+     "paper-faithful baseline (expand-kv decode attention)", {}, {}),
+    ("qwen3_moe_30b_a3b/decode_32k", "gqa_grouped",
+     "per-layer probe showed decode reads the kv cache expanded to every q "
+     "head (group=8x duplication via jnp.take); grouping q heads by kv head "
+     "in the einsum avoids the expansion — predict memory term -50%%",
+     {"gqa_grouped_decode": True}, {}),
+]
+
+
+def tagify(pair: str, label: str) -> str:
+    return pair.replace("/", "_") + "__" + label
+
+
+def run(args):
+    import dataclasses
+
+    from repro.launch.dryrun import lower_combo
+    from repro.launch.train import TrainHyper
+
+    os.makedirs(args.out, exist_ok=True)
+    for pair, label, hypothesis, cfg_over, hyp_over in ITERATIONS:
+        if args.only and args.only not in pair:
+            continue
+        arch, shape = pair.split("/")
+        path = os.path.join(args.out, tagify(pair, label) + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[skip] {pair} {label}")
+            continue
+        hyper = dataclasses.replace(TrainHyper(), **hyp_over)
+        report = lower_combo(arch, shape, multi_pod=False, hyper=hyper,
+                             cfg_overrides=cfg_over or None)
+        report["label"] = label
+        report["hypothesis"] = hypothesis
+        report["cfg_overrides"] = cfg_over
+        report["hyper_overrides"] = hyp_over
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[done] {pair} {label}")
+
+
+def report(args):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.out, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    order = {tagify(p, l): i for i, (p, l, *_rest) in enumerate(ITERATIONS)}
+    rows.sort(key=lambda d: order.get(
+        tagify(d["arch"] + "/" + d["shape"], d["label"]), 999))
+    print("| pair | iteration | compute | memory | collective | dominant | useful |")
+    print("|---|---|---:|---:|---:|---|---:|")
+    for d in rows:
+        r = d["roofline"]
+        print(f"| {d['arch']}×{d['shape']} | {d['label']} "
+              f"| {r['compute_s']:.2f}s | {r['memory_s']:.2f}s "
+              f"| {r['collective_s']:.2f}s | {r['dominant']} "
+              f"| {r['useful_flops_frac']:.2f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+    if args.report:
+        report(args)
+    else:
+        run(args)
+
+
+if __name__ == "__main__":
+    main()

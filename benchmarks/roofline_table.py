@@ -1,0 +1,78 @@
+"""Render the §Roofline table in EXPERIMENTS.md from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh 16x16] [--md]
+
+Each row: arch × shape — the three roofline terms (seconds), the dominant
+term, MODEL_FLOPS/HLO_FLOPs usefulness, and a per-device HBM figure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = ["llama3_8b", "mamba2_1p3b", "jamba_v01_52b", "musicgen_medium",
+              "llava_next_34b", "qwen3_moe_30b_a3b", "codeqwen15_7b",
+              "olmoe_1b_7b", "qwen3_4b", "yi_6b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath: str, mesh: str):
+    rows = []
+    for path in glob.glob(os.path.join(dirpath, "*.json")):
+        with open(path) as f:
+            d = json.load(f)
+        if d["mesh"] == mesh:
+            rows.append(d)
+    rows.sort(key=lambda d: (ARCH_ORDER.index(d["arch"]),
+                             SHAPE_ORDER.index(d["shape"])))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 0.1:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.2f}ms"
+
+
+def render(rows, md: bool = False) -> str:
+    out = []
+    if md:
+        out.append("| arch | shape | compute | memory | collective | "
+                   "dominant | useful | HBM/chip |")
+        out.append("|---|---|---:|---:|---:|---|---:|---:|")
+    for d in rows:
+        r = d["roofline"]
+        hbm = (d["memory"]["argument_size_in_bytes"]
+               + d["memory"]["temp_size_in_bytes"]) / d["chips"] / 2**30
+        cells = [d["arch"], d["shape"], fmt_s(r["compute_s"]).strip(),
+                 fmt_s(r["memory_s"]).strip(),
+                 fmt_s(r["collective_s"]).strip(), r["dominant"],
+                 f"{r['useful_flops_frac']:.2f}", f"{hbm:.1f} GiB"]
+        if md:
+            out.append("| " + " | ".join(cells) + " |")
+        else:
+            out.append(f"{cells[0]:<18} {cells[1]:<12} {cells[2]:>10} "
+                       f"{cells[3]:>10} {cells[4]:>10} {cells[5]:<10} "
+                       f"{cells[6]:>6} {cells[7]:>9}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh)
+    if not args.md:
+        print(f"{'arch':<18} {'shape':<12} {'compute':>10} {'memory':>10} "
+              f"{'collective':>10} {'dominant':<10} {'useful':>6} {'HBM':>9}")
+    print(render(rows, md=args.md))
+    print(f"\n{len(rows)} combos on mesh {args.mesh}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Batched serving example: prefill + greedy decode with a KV cache.
+
+Serves a small GQA transformer (the reduced llama3-8b family config) over a
+batch of variable-length requests:
+
+  1. right-pads the prompt batch and prefills it in q_chunk'd flash blocks,
+  2. greedily decodes continuation tokens with the O(1)-per-token KV-cache
+     decode path (the same code the decode_32k / long_500k dry-run lowers),
+  3. reports per-phase latency and tokens/s.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-1.3b]
+
+Works for any assigned architecture id (--arch); SSM archs serve with their
+recurrent state instead of a KV cache.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.dist import SINGLE
+from repro.models import model as model_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--gen-tokens", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    print(f"serving {cfg.name} (reduced: {cfg.num_layers}L d={cfg.d_model}, "
+          f"params≈{cfg.param_count()/1e6:.1f}M)")
+
+    key = jax.random.key(0)
+    params = model_lib.init(key, cfg, model_shards=1)
+
+    # --- a batch of 4 variable-length requests (token ids) ---------------
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).tolist()
+               for n in (9, 17, 5, 23)]
+    b = len(prompts)
+    plen = max(len(p) for p in prompts)
+    toks = np.zeros((b, plen), np.int32)
+    for i, p in enumerate(prompts):          # right-align so decode continues
+        toks[i, plen - len(p):] = p          # from a common position
+    toks = jnp.asarray(toks)
+
+    batch = {"tokens": toks}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(key, (b, 16, cfg.frontend_dim))
+
+    # --- prefill ----------------------------------------------------------
+    prefill = jax.jit(lambda p, bt: model_lib.prefill_step(
+        p, bt, cfg, SINGLE, q_chunk=32))
+    t0 = time.time()
+    logits, _ = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    first_tok = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1)
+
+    # --- decode loop (fresh cache; prompt replayed via teacher forcing) ---
+    cache = model_lib.init_cache(cfg, 1, b, args.max_len)
+    decode = jax.jit(lambda p, c, t, pos: model_lib.decode_step(
+        p, c, t, pos, cfg, SINGLE))
+
+    # replay prompt through the decode path to fill the cache
+    t0 = time.time()
+    for pos in range(plen):
+        nxt, _, cache = decode(params, cache, toks[:, pos:pos + 1],
+                               jnp.int32(pos))
+    jax.block_until_ready(nxt)
+    t_replay = time.time() - t0
+
+    # verify the decode path agrees with prefill on the next token
+    assert bool(jnp.all(nxt[:, 0] == first_tok[:, 0])), \
+        "decode path disagrees with prefill"
+
+    # greedy generation
+    out = [nxt]
+    t0 = time.time()
+    for k in range(args.gen_tokens - 1):
+        nxt, logits, cache = decode(params, cache, nxt,
+                                    jnp.int32(plen + k))
+        out.append(nxt)
+    jax.block_until_ready(nxt)
+    t_gen = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+
+    assert gen.shape == (b, args.gen_tokens)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    print(f"\nbatch={b}  prompt_len≤{plen}  gen={args.gen_tokens} tokens")
+    print(f"prefill: {t_prefill*1e3:7.1f} ms "
+          f"({b*plen/t_prefill:7.0f} tok/s)")
+    print(f"replay : {t_replay*1e3:7.1f} ms")
+    print(f"decode : {t_gen*1e3:7.1f} ms "
+          f"({b*(args.gen_tokens-1)/t_gen:7.0f} tok/s, "
+          f"{t_gen/(args.gen_tokens-1)*1e3:.1f} ms/step)")
+    print("\ncontinuations (token ids):")
+    for i in range(b):
+        print(f"  req{i} ({len(prompts[i])} prompt toks): "
+              f"{np.asarray(gen[i][:10]).tolist()} ...")
+    print("\nprefill/decode consistency check passed.")
+
+
+if __name__ == "__main__":
+    main()

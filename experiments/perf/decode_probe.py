@@ -1,0 +1,42 @@
+"""Probe: where do qwen3-moe decode_32k memory bytes go?
+
+Compares per-layer cost (2-layer minus 1-layer compiles) against napkin
+terms: expert weights, attention weights, KV-cache reads.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+
+from repro.launch.dryrun import _compile_combo
+from repro.launch.train import TrainHyper
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as roofline_lib
+from repro.configs.base import get_config, INPUT_SHAPES
+
+cfg0 = get_config("qwen3_moe_30b_a3b")
+mesh = mesh_lib.make_production_mesh()
+shape = INPUT_SHAPES["decode_32k"]
+
+res = {}
+for L in (1, 2):
+    cfg = dataclasses.replace(cfg0, num_layers=L)
+    compiled, _, _ = _compile_combo(cfg, shape, mesh, TrainHyper(), unroll=L)
+    r = roofline_lib.analyse(compiled, chips=256)
+    res[L] = r
+    print(f"L={L}: flops={r.flops:.3e} bytes={r.bytes_accessed:.3e} "
+          f"coll={r.coll_bytes:.3e}")
+
+per_layer_bytes = res[2].bytes_accessed - res[1].bytes_accessed
+per_layer_flops = res[2].flops - res[1].flops
+print(f"\nper-layer bytes: {per_layer_bytes/1e9:.2f} GB   "
+      f"per-layer flops: {per_layer_flops/1e9:.2f} GF")
+
+d, ff, e = cfg0.d_model, cfg0.d_ff, cfg0.moe_num_experts
+e_local = e // 16
+w_expert = 3 * d * ff * e_local * 4
+hd = cfg0.resolved_head_dim
+w_attn = (d * cfg0.num_heads * hd + 2 * d * cfg0.num_kv_heads * hd
+          + cfg0.num_heads * hd * d) * 4 / 16
+kv = 8 * 32768 * 2 * cfg0.num_kv_heads * hd * 4 / 16  # b_local x S, seq/model
+print(f"napkin/layer: expert weights {w_expert/1e9:.3f} GB, "
+      f"attn weights {w_attn/1e9:.4f} GB, kv reads {kv/1e9:.3f} GB")

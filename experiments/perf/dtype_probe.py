@@ -1,0 +1,46 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses, re, collections, sys
+from repro.launch.dryrun import _compile_combo
+from repro.launch.train import TrainHyper
+from repro.launch import mesh as mesh_lib
+from repro.configs.base import get_config, INPUT_SHAPES
+
+dtype = sys.argv[1] if len(sys.argv) > 1 else "bfloat16"
+cfg = dataclasses.replace(get_config("llama3_8b"), num_layers=1, dtype=dtype)
+mesh = mesh_lib.make_production_mesh()
+compiled, _, _ = _compile_combo(cfg, INPUT_SHAPES["train_4k"], mesh,
+                                TrainHyper(remat=False), unroll=1)
+text = compiled.as_text()
+agg = collections.Counter()
+for line in text.splitlines():
+    if "=" not in line:
+        continue
+    rhs = line.split("=", 1)[1]
+    m = re.search(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all)"
+                  r"(?:-start)?\(", rhs)
+    if not m or "-done(" in rhs:
+        continue
+    head = rhs.split("(", 1)[0]   # "f32[16,4096,4096]{1,0} all-reduce"
+    for dt, dims in re.findall(r"(\w+)\[([\d,]*)\]", head):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * {"f32": 4, "bf16": 2, "u32": 4, "s32": 4, "pred": 1,
+                 "f16": 2, "u8": 1}.get(dt, 4)
+        agg[(m.group(1), dt)] += b
+for k, v in agg.most_common(12):
+    print(k, f"{v/1e9:.3f} GB")
+
+shapes = collections.Counter()
+for line in text.splitlines():
+    if "=" not in line:
+        continue
+    rhs = line.split("=", 1)[1]
+    if not re.search(r"\ball-reduce(?:-start)?\(", rhs) or "-done(" in rhs:
+        continue
+    head = rhs.split("(", 1)[0].strip()
+    shapes[head.split("{")[0]] += 1
+for k, v in shapes.most_common(15):
+    print(v, "x", k)

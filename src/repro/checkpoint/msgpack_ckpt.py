@@ -1,0 +1,99 @@
+"""Pytree checkpointing: msgpack envelope + raw numpy buffers.
+
+Atomic (write to tmp, rename), step-indexed, with a retention policy.
+No flax/orbax dependency — arrays are serialised as (dtype, shape, bytes)
+triples and the tree structure via jax.tree_util key paths.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _encode_leaf(x):
+    if x is None:
+        return {"kind": "none"}
+    arr = np.asarray(x)
+    return {
+        "kind": "array",
+        "dtype": arr.dtype.str,
+        "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _decode_leaf(d):
+    if d["kind"] == "none":
+        return None
+    arr = np.frombuffer(d["data"], dtype=np.dtype(d["dtype"]))
+    return jnp.asarray(arr.reshape(d["shape"]))
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: x is None)
+    payload = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [_encode_leaf(l) for l in leaves],
+    }
+    path = os.path.join(directory, f"ckpt_{step:010d}.msgpack")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+    _retain(directory, keep)
+    return path
+
+
+def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:010d}.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = [_decode_leaf(d) for d in payload["leaves"]]
+    t_leaves, treedef = jax.tree_util.tree_flatten(
+        template, is_leaf=lambda x: x is None)
+    assert len(leaves) == len(t_leaves), "checkpoint/template structure mismatch"
+    for got, want in zip(leaves, t_leaves):
+        if want is not None and got is not None:
+            assert tuple(got.shape) == tuple(want.shape), (got.shape, want.shape)
+    return jax.tree_util.tree_unflatten(treedef, leaves), payload["step"]
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)\.msgpack", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def _retain(directory: str, keep: int):
+    steps = sorted(
+        int(re.fullmatch(r"ckpt_(\d+)\.msgpack", n).group(1))
+        for n in os.listdir(directory)
+        if re.fullmatch(r"ckpt_(\d+)\.msgpack", n)
+    )
+    for s in steps[:-keep]:
+        os.remove(os.path.join(directory, f"ckpt_{s:010d}.msgpack"))

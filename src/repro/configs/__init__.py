@@ -1,0 +1,2 @@
+from repro.configs.base import (ARCH_ALIASES, ARCH_IDS, INPUT_SHAPES,
+                                InputShape, LayerSlot, ModelConfig, get_config)

@@ -1,0 +1,369 @@
+"""The compressor zoo the paper benchmarks against (§5.1, Appendix G).
+
+Every compressor implements the same interface so the error-feedback
+optimizer (Alg. 2) and the benchmark harness can swap them freely:
+
+    init(shapes, specs, key)                 -> state
+    step(deltas, state, specs, ctx, key)     -> CompressOut
+
+``CompressOut.agg`` is the aggregated decompressed update (mean over the
+data axes) and ``CompressOut.recon`` is the reconstruction used for the
+error-feedback update.  ``allreduce`` marks whether the scheme is linear
+(all-reduce aggregatable) — the property the paper identifies as the key to
+scalability (§3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import matrixize, powersgd
+from repro.core.dist import MeshCtx, SINGLE
+from repro.core.powersgd import PowerSGDOut as CompressOut, _leaf_key
+
+
+class Compressor:
+    """Base class; subclasses set ``name`` and ``allreduce``."""
+
+    name: str = "base"
+    allreduce: bool = True
+    stateful: bool = False   # carries per-matrix state (e.g. warm-start Q)
+
+    def init(self, shapes, specs, key):
+        return None
+
+    def step(self, deltas, state, specs, ctx: MeshCtx = SINGLE, key=None) -> CompressOut:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _unzip3(triples):
+    is_t = lambda x: isinstance(x, tuple)
+    agg = jax.tree_util.tree_map(lambda t: t[0], triples, is_leaf=is_t)
+    recon = jax.tree_util.tree_map(lambda t: t[1], triples, is_leaf=is_t)
+    state = jax.tree_util.tree_map(lambda t: t[2], triples, is_leaf=is_t)
+    return agg, recon, state
+
+
+def _map_leaves(fn, deltas, state, specs, bits):
+    """fn(path, g, q, spec) -> (agg, recon, new_q); threads bits counter."""
+    triples = jax.tree_util.tree_map_with_path(
+        fn, deltas, state, specs, is_leaf=lambda x: x is None
+    )
+    agg, recon, new_state = _unzip3(triples)
+    if not jax.tree_util.tree_leaves(new_state):
+        new_state = None  # stateless compressor: collapse dict-of-Nones
+    return CompressOut(agg=agg, recon=recon, state=new_state, bits_per_worker=bits[0])
+
+
+def _budget(shape, spec, rank):
+    """Sparsifier budget b = (n+m)·r per matrix (paper Appendix G)."""
+    ms = matrixize.matrix_shape(shape, spec)
+    assert ms is not None
+    batch_shape, n, m = ms
+    return math.prod(batch_shape) * (n + m) * rank
+
+
+# ---------------------------------------------------------------------------
+# Identity (= full-precision SGD data path)
+# ---------------------------------------------------------------------------
+
+class IdentityCompressor(Compressor):
+    name = "identity"
+    allreduce = True
+
+    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+        bits = [0]
+
+        def leaf(path, g, q, spec):
+            bits[0] += matrixize.uncompressed_floats(g.shape) * 32
+            return ctx.pmean_data(g), g, None
+
+        return _map_leaves(leaf, deltas, deltas, specs, bits)
+
+
+# ---------------------------------------------------------------------------
+# PowerSGD (the paper's method) and its ablations
+# ---------------------------------------------------------------------------
+
+class PowerSGDCompressor(Compressor):
+    name = "powersgd"
+    allreduce = True
+    stateful = True
+
+    def __init__(self, rank=2, orthogonalizer="gram_schmidt", warm_start=True,
+                 num_iters=1, error_mode="global", use_pallas=False):
+        self.cfg = powersgd.PowerSGDConfig(
+            rank=rank, orthogonalizer=orthogonalizer, warm_start=warm_start,
+            num_iters=num_iters, error_mode=error_mode, use_pallas=use_pallas,
+        )
+        if num_iters > 1:
+            self.name = f"powersgd_best_approx_{num_iters}it"
+        elif not warm_start:
+            self.name = "powersgd_cold"
+
+    def init(self, shapes, specs, key):
+        return powersgd.init_state(self.cfg, shapes, specs, key)
+
+    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+        return powersgd.compress_aggregate(self.cfg, deltas, state, specs, ctx, key)
+
+
+class UnbiasedRankK(Compressor):
+    """§4.1: samples U with E[UUᵀ]=I and sends (MU, shared-seed U)."""
+
+    name = "unbiased_rank_k"
+    allreduce = True
+
+    def __init__(self, rank=2):
+        self.rank = rank
+
+    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+        bits = [0]
+
+        def leaf(path, g, q, spec):
+            ms = matrixize.matrix_shape(g.shape, spec)
+            if ms is None:
+                bits[0] += matrixize.uncompressed_floats(g.shape) * 32
+                return ctx.pmean_data(g), g, None
+            batch_shape, n, m = ms
+            mat = matrixize.to_matrix(g, spec)
+            k = _leaf_key(key, path)
+            # E[UUᵀ] = I_m  ⇐  entries iid N(0, 1/r)
+            u = jax.random.normal(k, (m, self.rank)) / jnp.sqrt(self.rank)
+            p = jnp.einsum("...nm,mr->...nr", mat, u)
+            p_agg = ctx.pmean_data(p)
+            recon = jnp.einsum("...nr,mr->...nm", p, u)
+            agg = jnp.einsum("...nr,mr->...nm", p_agg, u)
+            bits[0] += math.prod(batch_shape) * n * self.rank * 32
+            return (matrixize.from_matrix(agg, g.shape, spec),
+                    matrixize.from_matrix(recon, g.shape, spec), None)
+
+        return _map_leaves(leaf, deltas, deltas, specs, bits)
+
+
+# ---------------------------------------------------------------------------
+# Sparsifiers (Appendix G): Random Block / Random K / Sign+Norm / Top-K
+# ---------------------------------------------------------------------------
+
+class _FlatSparsifier(Compressor):
+    """Common scaffolding: compress each leaf as a flat vector with budget b."""
+
+    def __init__(self, rank=2):
+        self.rank = rank  # sets the budget b = (n+m)·r to match PowerSGD
+
+    def _leaf_flat(self, path, flat, b, key, ctx):
+        raise NotImplementedError
+
+    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+        bits = [0]
+
+        def leaf(path, g, q, spec):
+            if not spec.is_compressed():
+                bits[0] += matrixize.uncompressed_floats(g.shape) * 32
+                return ctx.pmean_data(g), g, None
+            b = min(_budget(g.shape, spec, self.rank), g.size)
+            k = _leaf_key(key, path)
+            agg_f, recon_f, leaf_bits = self._leaf_flat(path, g.reshape(-1), b, k, ctx)
+            bits[0] += leaf_bits
+            return agg_f.reshape(g.shape), recon_f.reshape(g.shape), None
+
+        return _map_leaves(leaf, deltas, deltas, specs, bits)
+
+
+class RandomBlock(_FlatSparsifier):
+    """Alg. 3: a shared-seed contiguous slice of length b.  Linear ⇒ all-reduce."""
+
+    name = "random_block"
+    allreduce = True
+
+    def _leaf_flat(self, path, flat, b, key, ctx):
+        n = flat.shape[0]
+        start = jax.random.randint(key, (), 0, max(n - b, 1))
+        block = jax.lax.dynamic_slice(flat, (start,), (b,))
+        agg_block = ctx.pmean_data(block)
+        zeros = jnp.zeros_like(flat)
+        recon = jax.lax.dynamic_update_slice(zeros, block, (start,))
+        agg = jax.lax.dynamic_update_slice(zeros, agg_block, (start,))
+        return agg, recon, b * 32
+
+
+class RandomK(_FlatSparsifier):
+    """Alg. 4: b shared-seed random coordinates.  Linear ⇒ all-reduce."""
+
+    name = "random_k"
+    allreduce = True
+
+    def _leaf_flat(self, path, flat, b, key, ctx):
+        n = flat.shape[0]
+        idx = jax.random.choice(key, n, (b,), replace=False)
+        vals = flat[idx]
+        agg_vals = ctx.pmean_data(vals)
+        recon = jnp.zeros_like(flat).at[idx].set(vals)
+        agg = jnp.zeros_like(flat).at[idx].set(agg_vals)
+        return agg, recon, b * 32
+
+
+class SignNorm(_FlatSparsifier):
+    """Alg. 5: sign(M)·‖M‖₁/nm.  Not linear ⇒ needs all-gather."""
+
+    name = "sign_norm"
+    allreduce = False
+
+    def _leaf_flat(self, path, flat, b, key, ctx):
+        n = flat.shape[0]
+        scale = jnp.mean(jnp.abs(flat))
+        recon = jnp.sign(flat) * scale
+        agg = ctx.pmean_data(recon)  # mean of per-worker reconstructions (gather)
+        return agg, recon, n * 1 + 32
+
+
+class TopK(_FlatSparsifier):
+    """Alg. 6: the b largest-|.| coordinates.  Not linear ⇒ all-gather."""
+
+    name = "top_k"
+    allreduce = False
+
+    def _leaf_flat(self, path, flat, b, key, ctx):
+        vals, idx = jax.lax.top_k(jnp.abs(flat), b)
+        picked = flat[idx]
+        recon = jnp.zeros_like(flat).at[idx].set(picked)
+        agg = ctx.pmean_data(recon)
+        return agg, recon, b * (32 + 32)
+
+
+# ---------------------------------------------------------------------------
+# Spectral Atomo (Wang et al., 2018) — Appendix G.6
+# ---------------------------------------------------------------------------
+
+class SpectralAtomo(Compressor):
+    """Importance-sampled SVD components; unbiased, all-gather, no EF.
+
+    Follows the paper's modification: resample until exactly r components are
+    selected (we use a fixed number of attempts with a deterministic top-r
+    fallback so the whole step stays jittable).
+    """
+
+    name = "spectral_atomo"
+    allreduce = False
+
+    def __init__(self, rank=2, attempts=8):
+        self.rank = rank
+        self.attempts = attempts
+
+    def _probs(self, s):
+        """Atomo water-filling: p_i = min(1, s_i/τ) with Σ p_i = r."""
+        r = self.rank
+        p = jnp.minimum(s * r / (jnp.sum(s) + 1e-12), 1.0)
+        for _ in range(12):  # fixed-point iterations, converges fast
+            clipped = p >= 1.0
+            mass = r - jnp.sum(jnp.where(clipped, 1.0, 0.0))
+            rest = jnp.sum(jnp.where(clipped, 0.0, s))
+            p = jnp.where(clipped, 1.0, s * jnp.maximum(mass, 0.0) / (rest + 1e-12))
+            p = jnp.minimum(p, 1.0)
+        return p
+
+    def _compress_one(self, mat, key):
+        n, m = mat.shape
+        u, s, vt = jnp.linalg.svd(mat, full_matrices=False)
+        p = self._probs(s)
+
+        def attempt(k):
+            sel = jax.random.uniform(k, s.shape) < p
+            return sel, jnp.sum(sel)
+
+        keys = jax.random.split(key, self.attempts)
+        sels, counts = jax.vmap(attempt)(keys)
+        ok = counts == self.rank
+        first = jnp.argmax(ok)
+        any_ok = jnp.any(ok)
+        sel = sels[first]
+        # fallback: deterministic top-r components
+        topr = jnp.arange(s.shape[0]) < self.rank
+        sel = jnp.where(any_ok, sel, topr)
+        w = jnp.where(sel, s / jnp.maximum(p, 1e-12), 0.0)
+        recon = jnp.einsum("nk,k,km->nm", u, w, vt)
+        return recon
+
+    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+        bits = [0]
+
+        def leaf(path, g, q, spec):
+            ms = matrixize.matrix_shape(g.shape, spec)
+            if ms is None:
+                bits[0] += matrixize.uncompressed_floats(g.shape) * 32
+                return ctx.pmean_data(g), g, None
+            batch_shape, n, m = ms
+            mat = matrixize.to_matrix(g, spec).reshape((-1, n, m))
+            k = _leaf_key(key, path)
+            recon = jax.vmap(self._compress_one)(mat, jax.random.split(k, mat.shape[0]))
+            recon = recon.reshape(g.shape)
+            agg = ctx.pmean_data(recon)
+            bits[0] += math.prod(batch_shape) * self.rank * (n + m) * 32
+            return agg, recon, None
+
+        return _map_leaves(leaf, deltas, deltas, specs, bits)
+
+
+# ---------------------------------------------------------------------------
+# Exact best rank-r (SVD truncation) — used by tests/benchmarks as the oracle
+# ---------------------------------------------------------------------------
+
+class ExactRankK(Compressor):
+    name = "exact_rank_k"
+    allreduce = False  # requires aggregating first (or gather); oracle only
+
+    def __init__(self, rank=2):
+        self.rank = rank
+
+    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+        bits = [0]
+
+        def leaf(path, g, q, spec):
+            ms = matrixize.matrix_shape(g.shape, spec)
+            if ms is None:
+                bits[0] += matrixize.uncompressed_floats(g.shape) * 32
+                return ctx.pmean_data(g), g, None
+            batch_shape, n, m = ms
+            g_mean = ctx.pmean_data(g)
+            mat = matrixize.to_matrix(g_mean, spec).reshape((-1, n, m))
+
+            def trunc(a):
+                u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+                s = s.at[self.rank:].set(0.0)
+                return jnp.einsum("nk,k,km->nm", u, s, vt)
+
+            recon = jax.vmap(trunc)(mat).reshape(g.shape)
+            bits[0] += math.prod(batch_shape) * self.rank * (n + m) * 32
+            return recon, recon, None
+
+        return _map_leaves(leaf, deltas, deltas, specs, bits)
+
+
+def make_compressor(name: str, rank: int = 2, **kw) -> Compressor:
+    registry = {
+        "identity": lambda: IdentityCompressor(),
+        "powersgd": lambda: PowerSGDCompressor(rank=rank, **kw),
+        "powersgd_cold": lambda: PowerSGDCompressor(rank=rank, warm_start=False, **kw),
+        "powersgd_best_approx": lambda: PowerSGDCompressor(
+            rank=rank, warm_start=False, num_iters=4, **kw),
+        "unbiased_rank_k": lambda: UnbiasedRankK(rank=rank),
+        "random_block": lambda: RandomBlock(rank=rank),
+        "random_k": lambda: RandomK(rank=rank),
+        "sign_norm": lambda: SignNorm(rank=rank),
+        "top_k": lambda: TopK(rank=rank),
+        "spectral_atomo": lambda: SpectralAtomo(rank=rank),
+        "exact_rank_k": lambda: ExactRankK(rank=rank),
+    }
+    try:
+        return registry[name]()
+    except KeyError:
+        raise ValueError(f"unknown compressor {name!r}; available: {sorted(registry)}") from None

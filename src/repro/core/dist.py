@@ -1,0 +1,117 @@
+"""Mesh/axis context threaded through the whole framework.
+
+All model and compressor code is written against :class:`MeshCtx` instead of
+hard-coding ``lax.psum(..., axis_name=...)`` calls.  Outside of a
+``shard_map`` (single-device smoke tests, benchmarks) the context has no axis
+names and every collective degenerates to the identity, so the *same* code
+path runs on one CPU device and on a 512-chip mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Names of the mesh axes the current computation is mapped over.
+
+    data_axes:  axes that carry data parallelism (gradient all-reduce),
+                e.g. ``("pod", "data")`` or ``("data",)``.
+    model_axis: axis carrying tensor/expert parallelism, e.g. ``"model"``.
+    seq_axes:   axes over which a decode KV cache is sequence-sharded
+                (flash-decode softmax merge): ``("model",)`` for decode_32k,
+                ``("pod", "data", "model")`` for long_500k (batch=1).
+    """
+
+    data_axes: Tuple[str, ...] = ()
+    model_axis: Optional[str] = None
+    seq_axes: Tuple[str, ...] = ()
+
+    # -- data-parallel collectives (gradient aggregation) ------------------
+    def psum_data(self, x):
+        return lax.psum(x, self.data_axes) if self.data_axes else x
+
+    def pmean_data(self, x):
+        return lax.pmean(x, self.data_axes) if self.data_axes else x
+
+    # -- model-parallel collectives (tensor parallelism) --------------------
+    def psum_model(self, x):
+        return lax.psum(x, self.model_axis) if self.model_axis else x
+
+    def pmean_model(self, x):
+        return lax.pmean(x, self.model_axis) if self.model_axis else x
+
+    def pmax_model(self, x):
+        return lax.pmax(x, self.model_axis) if self.model_axis else x
+
+    def all_gather_model(self, x, axis: int = -1, tiled: bool = True):
+        if self.model_axis is None:
+            return x
+        return lax.all_gather(x, self.model_axis, axis=axis, tiled=tiled)
+
+    def ppermute_model(self, x, perm):
+        if self.model_axis is None:
+            return x
+        return lax.ppermute(x, self.model_axis, perm)
+
+    def all_to_all_model(self, x, split_axis: int, concat_axis: int):
+        """Re-distribute: split ``split_axis`` over the model axis, gather
+        ``concat_axis`` (e.g. column-sharded → row-sharded activations)."""
+        if self.model_axis is None:
+            return x
+        return lax.all_to_all(x, self.model_axis, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+    # -- sequence-shard collectives (flash-decode merge) ---------------------
+    def psum_seq(self, x):
+        return lax.psum(x, self.seq_axes) if self.seq_axes else x
+
+    def pmax_seq(self, x):
+        return lax.pmax(x, self.seq_axes) if self.seq_axes else x
+
+    # -- sizes / indices ----------------------------------------------------
+    def data_size(self) -> int:
+        n = 1
+        for a in self.data_axes:
+            n *= lax.axis_size(a)
+        return n
+
+    def model_size(self) -> int:
+        return lax.axis_size(self.model_axis) if self.model_axis else 1
+
+    def seq_size(self) -> int:
+        n = 1
+        for a in self.seq_axes:
+            n *= lax.axis_size(a)
+        return n
+
+    def model_index(self):
+        if self.model_axis is None:
+            return 0
+        return lax.axis_index(self.model_axis)
+
+    def seq_index(self):
+        """Linearised index over the seq axes (row-major)."""
+        if not self.seq_axes:
+            return 0
+        idx = 0
+        for a in self.seq_axes:
+            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        return idx
+
+    def data_index(self):
+        """Linearised index over the data axes (row-major)."""
+        if not self.data_axes:
+            return 0
+        idx = 0
+        for a in self.data_axes:
+            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        return idx
+
+
+SINGLE = MeshCtx()  # single-device context: all collectives are identities

@@ -1,0 +1,98 @@
+"""Tensor ⇄ matrix reshaping rules for gradient compression (paper §3).
+
+The paper treats each parameter's gradient as a matrix:
+
+* dense / fully-connected weights are used as-is,
+* conv kernels ``(O, I, kh, kw)`` are flattened to ``(O, I·kh·kw)``
+  (Appendix F, Table 10),
+* vectors (biases, norm scales, per-head SSM scalars) are exempt and
+  aggregated uncompressed.
+
+Our parameters additionally carry *stacking* dimensions — a leading layer dim
+from ``lax.scan`` over the block stack, and an expert dim for MoE weights.
+Those become vmap batch dims of the compressor.
+
+Every parameter leaf is described by a :class:`MatrixSpec`; model inits
+produce a spec tree (same structure as the param tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixSpec:
+    """How one parameter tensor maps to compression matrices.
+
+    kind:
+      "none"   — aggregated uncompressed (vectors / tiny params)
+      "matrix" — reshape trailing dims to 2-D
+      "conv"   — (O, I, kh, kw) → (O, I·kh·kw), after batch dims
+    batch_dims: number of leading stacking dims (layer stack, expert dim)
+                that become vmap batch dims.
+    """
+
+    kind: str = "matrix"
+    batch_dims: int = 0
+
+    def is_compressed(self) -> bool:
+        return self.kind != "none"
+
+
+NONE = MatrixSpec(kind="none")
+
+
+def default_spec(leaf: jax.ShapeDtypeStruct | jax.Array, batch_dims: int = 0) -> MatrixSpec:
+    """Heuristic used by model inits: <2 trailing dims ⇒ uncompressed."""
+    trailing = len(leaf.shape) - batch_dims
+    if trailing < 2:
+        return NONE
+    if trailing == 4:
+        return MatrixSpec(kind="conv", batch_dims=batch_dims)
+    return MatrixSpec(kind="matrix", batch_dims=batch_dims)
+
+
+def matrix_shape(shape: Tuple[int, ...], spec: MatrixSpec) -> Optional[Tuple[Tuple[int, ...], int, int]]:
+    """Returns (batch_shape, n, m) or None for uncompressed leaves."""
+    if not spec.is_compressed():
+        return None
+    b = spec.batch_dims
+    batch_shape, rest = tuple(shape[:b]), shape[b:]
+    if spec.kind == "conv":
+        assert len(rest) == 4, f"conv spec needs 4 trailing dims, got {rest}"
+        n, m = rest[0], rest[1] * rest[2] * rest[3]
+    else:
+        assert len(rest) >= 2, f"matrix spec needs ≥2 trailing dims, got {rest}"
+        n, m = rest[0], math.prod(rest[1:])
+    return batch_shape, n, m
+
+
+def to_matrix(x: jax.Array, spec: MatrixSpec) -> jax.Array:
+    ms = matrix_shape(x.shape, spec)
+    assert ms is not None
+    batch_shape, n, m = ms
+    return x.reshape(batch_shape + (n, m))
+
+
+def from_matrix(mat: jax.Array, shape: Tuple[int, ...], spec: MatrixSpec) -> jax.Array:
+    return mat.reshape(shape)
+
+
+def compressed_floats(shape: Tuple[int, ...], spec: MatrixSpec, rank: int) -> int:
+    """Number of floats sent per all-reduce for this leaf at rank r
+    (the P and Q messages together: r·(n+m) per matrix in the batch)."""
+    ms = matrix_shape(shape, spec)
+    if ms is None:
+        return math.prod(shape)  # sent uncompressed
+    batch_shape, n, m = ms
+    return math.prod(batch_shape) * rank * (n + m)
+
+
+def uncompressed_floats(shape: Tuple[int, ...]) -> int:
+    return math.prod(shape)

@@ -1,0 +1,147 @@
+"""Rank-r PowerSGD compression (paper Algorithm 1).
+
+One warm-started subspace-iteration step per optimization step:
+
+    P  ← M Q                 (local matmul)
+    P  ← all-reduce-mean(P)  (data axes)
+    P̂  ← orthogonalize(P)
+    Q  ← Mᵀ P̂                (local matmul)
+    Q  ← all-reduce-mean(Q)  (data axes)
+    Δ' ← P̂ Qᵀ                (decompress)
+
+Linearity (Appendix A.3): both matmuls commute with the mean over workers, so
+the all-reduces aggregate the *compressed* representation directly — the
+whole compressor costs two tall-skinny matmuls, two `psum`s of r·(n+m) floats
+and one orthogonalization per matrix.
+
+Under tensor parallelism each model shard compresses its local slice of every
+weight matrix independently and all-reduces only over the data axes; the
+paper's W-worker linearity argument applies verbatim per shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import matrixize
+from repro.core.dist import MeshCtx, SINGLE
+from repro.core.orthogonalize import get_orthogonalizer
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerSGDConfig:
+    rank: int = 2
+    orthogonalizer: str = "gram_schmidt"   # paper default; "cholesky_qr" = TPU opt
+    warm_start: bool = True                # §4.2
+    num_iters: int = 1                     # >1 ⇒ Appendix G.7 best-approximation
+    error_mode: str = "global"             # "global" (reference impl) | "local" (Alg. 2 literal)
+    use_pallas: bool = False               # route matmuls through the Pallas kernels
+    dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass
+class PowerSGDOut:
+    agg: Any            # tree: aggregated decompressed update  (= mean_w Δ'_w)
+    recon: Any          # tree: reconstruction used for the error update
+    state: Any          # tree: new Q factors (warm start)
+    bits_per_worker: int  # floats all-reduced per step per model shard
+
+
+def _leaf_key(key: jax.Array, path) -> jax.Array:
+    h = hashlib.sha256(jax.tree_util.keystr(path).encode()).digest()
+    return jax.random.fold_in(key, int.from_bytes(h[:4], "little"))
+
+
+def init_state(cfg: PowerSGDConfig, shapes, specs, key: jax.Array):
+    """Q ∈ R^{m×r} per matrix leaf, i.i.d. standard normal (Alg. 1 line 1)."""
+
+    def init_leaf(path, shape_leaf, spec):
+        ms = matrixize.matrix_shape(tuple(shape_leaf.shape), spec)
+        if ms is None:
+            return None
+        batch_shape, _, m = ms
+        k = _leaf_key(key, path)
+        return jax.random.normal(k, batch_shape + (m, cfg.rank), dtype=cfg.dtype)
+
+    return jax.tree_util.tree_map_with_path(
+        init_leaf, shapes, specs, is_leaf=lambda x: x is None
+    )
+
+
+def _matmuls(cfg: PowerSGDConfig):
+    """Return (project, backproject): P = M Q and Qn = Mᵀ P̂ on (..., n, m)."""
+    if cfg.use_pallas:
+        from repro.kernels import ops  # lazy: optional dependency direction
+
+        return ops.lowrank_project, ops.lowrank_backproject
+    project = lambda m, q: jnp.einsum("...nm,...mr->...nr", m, q)
+    backproject = lambda m, p: jnp.einsum("...nm,...nr->...mr", m, p)
+    return project, backproject
+
+
+def compress_aggregate(
+    cfg: PowerSGDConfig,
+    deltas,                      # tree of update tensors (grad + error)
+    state,                       # tree of Q factors (or None per leaf)
+    specs,
+    ctx: MeshCtx = SINGLE,
+    key: Optional[jax.Array] = None,
+) -> PowerSGDOut:
+    orth = get_orthogonalizer(cfg.orthogonalizer)
+    project, backproject = _matmuls(cfg)
+    floats_sent = [0]
+
+    def leaf(path, g, q, spec):
+        if q is None:  # uncompressed (vector) leaf — paper's bias rule
+            agg = ctx.pmean_data(g)
+            floats_sent[0] += matrixize.uncompressed_floats(g.shape)
+            return agg, g, None
+
+        mat = matrixize.to_matrix(g, spec).astype(cfg.dtype)
+        if not cfg.warm_start:
+            k = _leaf_key(key, path)
+            q = jax.random.normal(k, q.shape, dtype=cfg.dtype)
+
+        n_iter = max(1, cfg.num_iters)
+        for it in range(n_iter):
+            p = project(mat, q)                    # (..., n, r)
+            p = ctx.pmean_data(p)
+            p_hat = orth(p)
+            q_local = backproject(mat, p_hat)      # (..., m, r)
+            q = ctx.pmean_data(q_local)
+
+        agg_mat = jnp.einsum("...nr,...mr->...nm", p_hat, q)
+        if cfg.error_mode == "local":
+            recon_mat = jnp.einsum("...nr,...mr->...nm", p_hat, q_local)
+        else:
+            recon_mat = agg_mat
+        floats_sent[0] += matrixize.compressed_floats(g.shape, spec, cfg.rank)
+
+        agg = matrixize.from_matrix(agg_mat, g.shape, spec).astype(g.dtype)
+        recon = matrixize.from_matrix(recon_mat, g.shape, spec).astype(g.dtype)
+        return agg, recon, q
+
+    triples = jax.tree_util.tree_map_with_path(
+        leaf, deltas, state, specs, is_leaf=lambda x: x is None
+    )
+    # tree_map_with_path mapped over `deltas`' structure; unzip the 3-tuples
+    agg = jax.tree_util.tree_map(lambda t: t[0], triples, is_leaf=lambda x: isinstance(x, tuple))
+    recon = jax.tree_util.tree_map(lambda t: t[1], triples, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = jax.tree_util.tree_map(lambda t: t[2], triples, is_leaf=lambda x: isinstance(x, tuple))
+    return PowerSGDOut(agg=agg, recon=recon, state=new_state, bits_per_worker=floats_sent[0] * 32)
+
+
+def compressed_floats_total(shapes, specs, rank: int) -> int:
+    """Analytic bytes-per-all-reduce accounting (paper Tables 3/10/11)."""
+    total = [0]
+
+    def leaf(shape_leaf, spec):
+        total[0] += matrixize.compressed_floats(tuple(shape_leaf.shape), spec, rank)
+
+    jax.tree_util.tree_map(leaf, shapes, specs)
+    return total[0]

@@ -1,0 +1,118 @@
+"""Deterministic synthetic data pipelines.
+
+The benchmarks need *learnable* tasks (the paper's claims are about reaching
+target quality, not just throughput), so the LM stream is a fixed-seed
+order-2 Markov chain over the vocabulary — a task with real structure whose
+achievable perplexity is far below uniform — and the classification stream
+is a Gaussian-cluster task.  Everything is reproducible from integer seeds
+and supports per-worker sharding by slicing the global batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MarkovLM:
+    """Order-k Markov chain token stream with a peaked transition table.
+
+    ``order=2`` (default) keys the transition on the last *two* tokens —
+    a hash-lookup task with vocab² contexts and no partial credit, so small
+    models need many epochs before the loss moves.  ``order=1`` keys on the
+    previous token only (vocab contexts): learnable within tens of steps,
+    which is what the convergence tests and quick benchmarks use."""
+
+    vocab: int
+    seed: int = 0
+    branching: int = 4  # plausible next-tokens per context
+    order: int = 2
+    clusters: int = 0   # >0: transitions depend on token%clusters only —
+                        # token roles share ~`clusters` rows, so gradients
+                        # are genuinely low-rank (the paper's premise §2)
+
+    def __post_init__(self):
+        assert self.order in (1, 2), self.order
+        rng = np.random.RandomState(self.seed)
+        # hash-based sparse transition: next ∈ {h(context, j) : j < branching}
+        self._mix = rng.randint(1, 2**31 - 1, size=3)
+
+    def _ctx(self, c):
+        return c % self.clusters if self.clusters else c
+
+    def _nexts(self, c1, c2):
+        a, b, c = self._mix
+        base = (self._ctx(c1) * a * (self.order > 1)
+                + self._ctx(c2) * b) % (2**31 - 1)
+        return [(base + j * c) % self.vocab for j in range(self.branching)]
+
+    def sample(self, batch: int, seq: int, step: int) -> np.ndarray:
+        rng = np.random.RandomState((self.seed * 1_000_003 + step) % 2**31)
+        out = np.empty((batch, seq + 1), dtype=np.int32)
+        c1 = rng.randint(0, self.vocab, size=batch)
+        c2 = rng.randint(0, self.vocab, size=batch)
+        out[:, 0] = c1
+        out[:, 1] = c2
+        choices = rng.randint(0, self.branching, size=(batch, seq - 1))
+        noise = rng.rand(batch, seq - 1) < 0.05  # 5% uniform noise
+        noise_tok = rng.randint(0, self.vocab, size=(batch, seq - 1))
+        a, b, c = self._mix
+        for t in range(seq - 1):
+            base = (self._ctx(c1) * a * (self.order > 1)
+                    + self._ctx(c2) * b) % (2**31 - 1)
+            nxt = (base + choices[:, t] * c) % self.vocab
+            nxt = np.where(noise[:, t], noise_tok[:, t], nxt)
+            out[:, t + 2] = nxt
+            c1, c2 = c2, nxt
+        return out
+
+    def batches(self, batch: int, seq: int) -> Iterator[dict]:
+        step = 0
+        while True:
+            toks = self.sample(batch, seq, step)
+            yield {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+            step += 1
+
+
+@dataclasses.dataclass
+class GaussianClusters:
+    """k-class Gaussian blobs rendered as small 'images' (for the ResNet)."""
+
+    num_classes: int = 10
+    image_size: int = 16
+    channels: int = 3
+    seed: int = 0
+    noise: float = 0.8
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        d = self.image_size * self.image_size * self.channels
+        self._centers = rng.randn(self.num_classes, d).astype(np.float32)
+
+    def sample(self, batch: int, step: int) -> dict:
+        rng = np.random.RandomState((self.seed * 7_368_787 + step) % 2**31)
+        labels = rng.randint(0, self.num_classes, size=batch)
+        d = self._centers.shape[1]
+        x = self._centers[labels] + self.noise * rng.randn(batch, d).astype(np.float32)
+        images = x.reshape(batch, self.image_size, self.image_size, self.channels)
+        return {"images": images, "labels": labels.astype(np.int32)}
+
+    def batches(self, batch: int) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.sample(batch, step)
+            step += 1
+
+
+def shard_batch(batch: dict, worker: int, num_workers: int) -> dict:
+    """Slice a global batch into this worker's shard (paper's W-worker setup)."""
+    out = {}
+    for k, v in batch.items():
+        n = v.shape[0]
+        assert n % num_workers == 0, (k, n, num_workers)
+        per = n // num_workers
+        out[k] = v[worker * per:(worker + 1) * per]
+    return out

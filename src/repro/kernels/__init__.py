@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the PowerSGD hot loop.
+
+  * lowrank.py  — P = M Q and Q = Mᵀ P̂ tall-skinny matmuls (VMEM tiled)
+  * ef_apply.py — fused decompress + momentum + parameter update
+  * ops.py      — jit'd public wrappers
+  * ref.py      — pure-jnp oracles for the allclose tests
+"""

@@ -1,0 +1,44 @@
+"""jit'd public wrappers around the Pallas kernels, plus the tree-level
+fused EF apply used by the error-feedback optimizer."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ef_apply as _ef
+from repro.kernels import lowrank as _lr
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def lowrank_project(m, q, block_n=_lr.DEFAULT_BLOCK_N,
+                    block_k=_lr.DEFAULT_BLOCK_K, interpret=None):
+    """P = M Q (batched)."""
+    return _lr.lowrank_project(m, q, block_n=block_n, block_k=block_k,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def lowrank_backproject(m, p_hat, block_n=_lr.DEFAULT_BLOCK_N,
+                        block_k=_lr.DEFAULT_BLOCK_K, interpret=None):
+    """Q = Mᵀ P̂ (batched)."""
+    return _lr.lowrank_backproject(m, p_hat, block_n=block_n,
+                                   block_k=block_k, interpret=interpret)
+
+
+def ef_apply(x, mom, p_hat, q, lr, lam, **kw):
+    """Fused decompress + momentum + param update for one matrix."""
+    return _ef.ef_apply(x, mom, p_hat, q, lr, lam, **kw)
+
+
+def ef_apply_tree(params, agg, momentum_state, *, lr, momentum):
+    """Tree-level EF apply: the per-matrix fused kernel needs the (P̂, Q)
+    factors; when only the dense aggregate is available (as at the generic
+    compressor interface), apply the unfused update."""
+    new_momentum = jax.tree_util.tree_map(
+        lambda m, d: momentum * m + d, momentum_state, agg)
+    new_params = jax.tree_util.tree_map(
+        lambda x, d, m: x - lr * (d + m), params, agg, new_momentum)
+    return new_params, new_momentum

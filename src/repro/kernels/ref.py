@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lowrank_project(m, q):
+    """P = M Q.   m: (..., n, k), q: (..., k, r) → (..., n, r)."""
+    return jnp.einsum("...nk,...kr->...nr", m, q)
+
+
+def lowrank_backproject(m, p_hat):
+    """Q = Mᵀ P̂.  m: (..., n, k), p_hat: (..., n, r) → (..., k, r)."""
+    return jnp.einsum("...nk,...nr->...kr", m, p_hat)
+
+
+def ef_apply(x, mom, p_hat, q, lr, lam):
+    """Fused decompress + momentum + parameter update (Alg. 2 lines 11-13).
+
+        Δ'   = P̂ Qᵀ
+        mom' = λ·mom + Δ'
+        x'   = x − lr·(Δ' + mom')
+
+    Returns (x', mom')."""
+    delta = jnp.einsum("...nr,...mr->...nm", p_hat, q)
+    new_mom = lam * mom + delta
+    new_x = x - lr * (delta + new_mom)
+    return new_x, new_mom

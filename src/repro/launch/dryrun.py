@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without real
+hardware.
+
+For every (architecture × input shape), lower + compile the appropriate step
+(train / prefill / decode) on the production mesh — single-pod 16×16 and
+multi-pod 2×16×16 — and record memory analysis, cost analysis and the
+roofline terms.
+
+The two lines above MUST run before any other import: jax locks the device
+count at first initialisation.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as roofline_lib
+from repro.launch.train import TrainHyper, make_train_step
+from repro.launch.serve import make_decode_step, make_prefill_step
+
+
+def _compile_combo(cfg, shape, mesh, hyper, unroll: int):
+    """Lower + compile one step for ``cfg``; returns (compiled, t_lower, t_compile)."""
+    t0 = time.time()
+    if shape.kind == "train":
+        from repro.launch import specs as specs_lib
+        hy = dataclasses.replace(hyper, unroll=unroll)
+        step_fn, abstract_state, _ = make_train_step(cfg, mesh, hy)
+        params_sds, ef_sds = abstract_state()
+        batch = specs_lib.with_sharding(
+            specs_lib.batch_specs(cfg, shape),
+            specs_lib.batch_pspecs(cfg, shape, mesh_lib.data_axes(mesh)),
+            mesh)
+        key = jax.eval_shape(lambda: jax.random.key(0))
+        lowered = step_fn.lower(params_sds, ef_sds, batch, key)
+    elif shape.kind == "prefill":
+        step_fn, abstract = make_prefill_step(cfg, mesh, shape,
+                                              q_chunk=hyper.q_chunk,
+                                              unroll=unroll)
+        lowered = step_fn.lower(*abstract())
+    else:  # decode
+        step_fn, abstract = make_decode_step(cfg, mesh, shape, unroll=unroll)
+        lowered = step_fn.lower(*abstract())
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                hyper: TrainHyper = None, verbose: bool = True,
+                cost_mode: str = "extrapolate",
+                cfg_overrides: dict = None) -> dict:
+    """Lower + compile one (arch × shape × mesh) and return the report.
+
+    cost_mode:
+      "unroll"      — fully unroll the layer scan; exact but slow to compile.
+      "extrapolate" — compile the full model with the scan (memory analysis,
+                      the deployable artifact) plus 1-period and 2-period
+                      variants; per-period cost = cost₂ − cost₁ and
+                      total = cost₁ + (P−1)·(cost₂ − cost₁).  XLA's
+                      cost_analysis counts a while body once, so this
+                      recovers the full-depth cost at a fraction of the
+                      compile time (validated against "unroll" in
+                      EXPERIMENTS.md §Dry-run).
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    info = mesh_lib.mesh_info(mesh)
+    hyper = hyper or TrainHyper()
+
+    mf = roofline_lib.model_flops_estimate(cfg, shape)
+
+    if cost_mode == "unroll":
+        compiled, t_lower, t_compile = _compile_combo(
+            cfg, shape, mesh, hyper, unroll=cfg.num_periods)
+        roof = roofline_lib.analyse(compiled, chips=info["chips"],
+                                    model_flops=mf)
+        mem_compiled = compiled
+    else:
+        # the deployable artifact: full depth, scan kept (memory analysis)
+        mem_compiled, t_lower, t_compile = _compile_combo(
+            cfg, shape, mesh, hyper, unroll=1)
+        p = cfg.num_periods
+        cfg1 = dataclasses.replace(cfg, num_layers=cfg.period)
+        cfg2 = dataclasses.replace(cfg, num_layers=2 * cfg.period)
+        c1, _, t1 = _compile_combo(cfg1, shape, mesh, hyper, unroll=1)
+        c2, _, t2 = _compile_combo(cfg2, shape, mesh, hyper, unroll=2)
+        r1 = roofline_lib.analyse(c1, chips=info["chips"])
+        r2 = roofline_lib.analyse(c2, chips=info["chips"])
+        roof = roofline_lib.Roofline(
+            flops=r1.flops + (p - 1) * (r2.flops - r1.flops),
+            bytes_accessed=r1.bytes_accessed
+            + (p - 1) * (r2.bytes_accessed - r1.bytes_accessed),
+            coll_bytes=r1.coll_bytes + (p - 1) * (r2.coll_bytes - r1.coll_bytes),
+            chips=info["chips"],
+            model_flops=mf,
+            coll_detail={k: int(r1.coll_detail[k] + (p - 1) *
+                                (r2.coll_detail[k] - r1.coll_detail[k]))
+                         for k in r1.coll_detail},
+        )
+        t_compile += t1 + t2
+
+    mem = mem_compiled.memory_analysis()
+    mem_report = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_report[attr] = int(v)
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": info["chips"],
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_report,
+        "roofline": roof.to_dict(),
+    }
+    if verbose:
+        bpd = (mem_report.get("argument_size_in_bytes", 0)
+               + mem_report.get("temp_size_in_bytes", 0)) / info["chips"]
+        print(f"[{arch} × {shape_name} × {report['mesh']}] "
+              f"compile={t_compile:.1f}s "
+              f"flops={roof.flops:.3e} bytes={roof.bytes_accessed:.3e} "
+              f"coll={roof.coll_bytes:.3e} dominant={roof.dominant} "
+              f"compute={roof.compute_s*1e3:.2f}ms memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"useful={roof.useful_flops_frac:.2f}")
+        print("  memory_analysis:", json.dumps(mem_report))
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (e.g. llama3-8b); default: all")
+    ap.add_argument("--shape", default=None,
+                    help="input shape (train_4k|prefill_32k|decode_32k|long_500k)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--fail-fast", action="store_true")
+    ap.add_argument("--cost-mode", default="extrapolate",
+                    choices=["extrapolate", "unroll"])
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}".replace("-", "_").replace(".", "p")
+                out_path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(out_path):
+                    print(f"[skip] {tag} (exists)")
+                    continue
+                try:
+                    report = lower_combo(arch, shape, multi_pod=mp,
+                                         cost_mode=args.cost_mode)
+                    with open(out_path, "w") as f:
+                        json.dump(report, f, indent=2)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, str(e)))
+                    if args.fail_fast:
+                        sys.exit(1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

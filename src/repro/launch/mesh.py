@@ -1,0 +1,48 @@
+"""Production mesh definitions.
+
+Single pod: 16×16 = 256 chips (TPU v5e pod), axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model).
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Small mesh for CI on a host with 8 fake devices."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    assert "model" in mesh.axis_names
+    return "model"
+
+
+def mesh_info(mesh):
+    dp = 1
+    for a in data_axes(mesh):
+        dp *= mesh.shape[a]
+    return {
+        "data_parallel": dp,
+        "model_parallel": mesh.shape["model"],
+        "chips": dp * mesh.shape["model"],
+        "axis_names": tuple(mesh.axis_names),
+    }

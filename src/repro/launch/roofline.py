@@ -1,0 +1,174 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Terms (per step, per chip):
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` supplies FLOPs and bytes accessed.  Collective bytes are
+not in cost_analysis — we parse the optimized HLO text and sum the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'f32[128,256]'-style shape."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+def _result_shapes(line: str):
+    """Shapes on the lhs of an HLO op line (tuple results included)."""
+    lhs = line.split("=", 1)[0]
+    return _SHAPE_RE.findall(lhs)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-operand sizes per collective kind over the optimized HLO.
+
+    Result sizes are the right accounting for all-gather (output = gathered)
+    and all-reduce; for reduce-scatter/all-to-all the result understates by
+    the shard factor but matches what actually lands on each chip's links.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match op kind after the '=' to avoid variable-name false positives
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1].lstrip()
+        kind = None
+        for c in _COLLECTIVES:
+            if rhs.startswith(c) or re.match(rf"\S*\s*{c}\(", rhs) or \
+               re.match(rf"{c}-start", rhs):
+                kind = c
+                break
+        # rhs like: "f32[8,16]{1,0} all-reduce(...)" — kind appears after shape
+        if kind is None:
+            m = re.match(r"(?:\([^)]*\)|\S+)\s+([\w-]+)", rhs)
+            if m and any(m.group(1).startswith(c) for c in _COLLECTIVES):
+                kind = next(c for c in _COLLECTIVES if m.group(1).startswith(c))
+        if kind is None:
+            continue
+        if re.search(r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)-done", rhs):
+            continue  # async completion carries no new bytes
+        total = sum(_shape_bytes(f"{dt}[{dims}]")
+                    for dt, dims in _SHAPE_RE.findall(rhs.split("(", 1)[0]))
+        out[kind] += total
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-chip HLO flops (SPMD program)
+    bytes_accessed: float      # per-chip HLO bytes accessed
+    coll_bytes: float          # per-chip collective bytes
+    chips: int
+    model_flops: float = 0.0   # 6·N·D analytic model flops (whole mesh)
+    coll_detail: Optional[Dict[str, int]] = None
+
+    @property
+    def compute_s(self) -> float:
+        # cost_analysis reports the per-chip SPMD program ⇒ mesh-total
+        # flops = flops × chips; the formula HLO_FLOPs/(chips × peak)
+        # therefore reduces to flops/peak
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # HLO is per-chip SPMD: coll_bytes already count one chip's traffic
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_frac": self.useful_flops_frac,
+            "coll_detail": self.coll_detail,
+        }
+
+
+def analyse(compiled, chips: int, model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    total_coll = sum(v for k, v in coll.items() if k != "count")
+    return Roofline(flops=flops, bytes_accessed=byts, coll_bytes=total_coll,
+                    chips=chips, model_flops=model_flops, coll_detail=coll)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference forward."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens

@@ -1,0 +1,166 @@
+"""PartitionSpec derivation for optimizer / compressor state, and
+ShapeDtypeStruct ``input_specs()`` for every (architecture × input shape).
+
+Nothing in this module allocates device memory — the dry-run lowers
+train/serve steps entirely from these abstract values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import matrixize
+from repro.core.error_feedback import EFState
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import attention, model
+from repro.launch import mesh as mesh_lib
+
+
+def qstate_pspec(param_spec: P, mspec: matrixize.MatrixSpec) -> Optional[P]:
+    """PartitionSpec of the PowerSGD Q factor for one parameter.
+
+    Q has shape batch_shape + (m, r): batch dims keep their entries; the m
+    dim is model-sharded iff any of the parameter's trailing (m) dims is."""
+    if not mspec.is_compressed():
+        return None
+    b = mspec.batch_dims
+    entries = tuple(param_spec) + (None,) * 16  # pad
+    m_entries = entries[b + 1:b + 16]
+    m_spec = "model" if any(e == "model" for e in m_entries) else None
+    return P(*(entries[:b] + (m_spec, None)))
+
+
+def qstate_pspecs(param_pspecs, mspecs):
+    return jax.tree_util.tree_map(
+        qstate_pspec, param_pspecs, mspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def ef_pspecs(param_pspecs, mspecs, dp_axes: Tuple[str, ...],
+              stateful: bool = True) -> EFState:
+    """PartitionSpecs for the EF-SGD state tree.
+
+    ``stateful=False`` — the compressor carries no per-matrix state
+    (identity, sparsifiers): ``comp`` is the empty pytree ``None``."""
+    error = jax.tree_util.tree_map(
+        lambda s: P(*((dp_axes,) + tuple(s))), param_pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    return EFState(
+        error=error,
+        momentum=param_pspecs,
+        comp=qstate_pspecs(param_pspecs, mspecs) if stateful else None,
+        step=P(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+VLM_PATCH_TOKENS = 2880  # ≈ 5 anyres tiles × 576 patches
+
+
+def batch_pspecs(cfg: ModelConfig, shape: InputShape, dp_axes):
+    dp = dp_axes if shape.global_batch > 1 else None
+    if shape.kind in ("train", "prefill"):
+        s = {"tokens": P(dp, None), "labels": P(dp, None)}
+        if cfg.frontend == "vision":
+            s["patches"] = P(dp, None, None)
+        if shape.kind == "prefill":
+            s.pop("labels")
+        return s
+    return {"tokens": P(dp, None)}
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape):
+    """Global-shape ShapeDtypeStructs for the step inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "vision":
+            n_img = VLM_PATCH_TOKENS
+            out = {
+                "tokens": jax.ShapeDtypeStruct((b, s - n_img), jnp.int32),
+                "patches": jax.ShapeDtypeStruct((b, n_img, cfg.frontend_dim), jnp.float32),
+            }
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((b, s - n_img), jnp.int32)
+            return out
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return out
+    # decode: one new token per sequence
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def with_sharding(tree_sds, tree_pspecs, mesh):
+    def leaf(sds, spec):
+        if sds is None:
+            return None
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(
+        leaf, tree_sds, tree_pspecs, is_leaf=lambda x: x is None)
+
+
+# ---------------------------------------------------------------------------
+# decode layouts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeLayout:
+    """How the KV cache is laid out on the mesh for a decode shape."""
+
+    batch_axes: Tuple[str, ...]   # axes sharding the request batch
+    seq_axes: Tuple[str, ...]     # axes sharding the cache sequence
+    cache_len: int                # global cache length (window if sliding)
+    window: int                   # 0 = full cache
+
+
+def decode_layout(cfg: ModelConfig, shape: InputShape, dp_axes) -> DecodeLayout:
+    uses_window = bool(cfg.decode_window) and shape.seq_len > cfg.decode_window
+    cache_len = cfg.decode_window if uses_window else shape.seq_len
+    if shape.global_batch == 1:
+        # long_500k: batch is unshardable — shard the cache sequence over
+        # every axis (flash-decode merge over pod+data+model)
+        return DecodeLayout(batch_axes=(), seq_axes=tuple(dp_axes) + ("model",),
+                            cache_len=cache_len,
+                            window=cfg.decode_window if uses_window else 0)
+    return DecodeLayout(batch_axes=tuple(dp_axes), seq_axes=("model",),
+                        cache_len=cache_len,
+                        window=cfg.decode_window if uses_window else 0)
+
+
+def axis_sizes(mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def abstract_cache(cfg: ModelConfig, layout: DecodeLayout, shape: InputShape,
+                   mesh, model_shards: int):
+    """Global-shape SDS tree for the stacked decode cache + its pspecs."""
+    from repro.models import blocks
+
+    dtype = cfg.jnp_dtype()
+    b = shape.global_batch
+    seq = layout.cache_len
+    # build the *local* template at global sizes via the init fn signature:
+    # init_cache takes local sizes; global tree = local sizes × shard counts,
+    # so we call it with the global sizes and shard via pspecs.
+    # global template: full batch/seq/head sizes (model_shards=1), sharded
+    # down to local slices by the pspecs below
+    tmpl = jax.eval_shape(lambda: blocks.init_cache(cfg, 1, b, seq, dtype))
+    ps = blocks.cache_pspecs(
+        cfg,
+        layout.batch_axes if layout.batch_axes else None,
+        layout.seq_axes if layout.seq_axes else None,
+    )
+    return tmpl, ps

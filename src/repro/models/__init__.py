@@ -1,0 +1,1 @@
+from repro.models import attention, blocks, common, lstm, mamba2, mlp, model, moe, resnet

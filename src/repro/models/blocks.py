@@ -1,0 +1,237 @@
+"""Block stack: pre-norm residual blocks assembled from the period's layer
+slots and scanned over periods (``lax.scan`` keeps the HLO O(1) in depth).
+
+Every architecture is ``num_periods`` repetitions of a static tuple of
+:class:`LayerSlot`s — dense models have one slot, Jamba has eight
+(7 mamba + 1 attention, MoE on every other FFN).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import MeshCtx
+from repro.core.matrixize import NONE as SPEC_NONE
+from repro.models import attention, common, mamba2, mlp, moe
+from repro.configs.base import ModelConfig
+
+
+def _slot_init(key, slot, cfg: ModelConfig, model_shards: int, dtype):
+    p: Dict[str, Any] = {"norm1": common.rmsnorm_init(cfg.d_model, dtype)}
+    km, kf = jax.random.split(key)
+    if slot.mixer == "attn":
+        p["mixer"] = attention.init(km, cfg, model_shards, dtype)
+    elif slot.mixer == "mamba":
+        p["mixer"] = mamba2.init(km, cfg, model_shards, dtype)
+    else:
+        raise ValueError(slot.mixer)
+    if slot.ffn != "none":
+        p["norm2"] = common.rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = moe.init(kf, cfg, dtype) if slot.ffn == "moe" else mlp.init(kf, cfg, dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig, model_shards: int, dtype=jnp.float32):
+    def one_period(k):
+        ks = jax.random.split(k, len(cfg.slots))
+        return {f"slot{i}": _slot_init(ks[i], s, cfg, model_shards, dtype)
+                for i, s in enumerate(cfg.slots)}
+
+    keys = jax.random.split(key, cfg.num_periods)
+    return jax.vmap(one_period)(keys)
+
+
+def _slot_pspecs(slot, cfg):
+    p = {"norm1": P(None)}
+    p["mixer"] = attention.pspecs(cfg) if slot.mixer == "attn" else mamba2.pspecs(cfg)
+    if slot.ffn != "none":
+        p["norm2"] = P(None)
+        p["ffn"] = moe.pspecs(cfg) if slot.ffn == "moe" else mlp.pspecs(cfg)
+    return p
+
+
+def pspecs(cfg: ModelConfig):
+    per = {f"slot{i}": _slot_pspecs(s, cfg) for i, s in enumerate(cfg.slots)}
+    return common.tree_stackspec(per)  # prepend the period dim
+
+
+def _slot_mspecs(slot, cfg):
+    p = {"norm1": SPEC_NONE}
+    p["mixer"] = attention.mspecs(cfg) if slot.mixer == "attn" else mamba2.mspecs(cfg)
+    if slot.ffn != "none":
+        p["norm2"] = SPEC_NONE
+        p["ffn"] = moe.mspecs(cfg) if slot.ffn == "moe" else mlp.mspecs(cfg)
+    return p
+
+
+def mspecs(cfg: ModelConfig):
+    per = {f"slot{i}": _slot_mspecs(s, cfg) for i, s in enumerate(cfg.slots)}
+    return common.tree_stack_mspec(per)  # period dim joins the compressor batch
+
+
+# ---------------------------------------------------------------------------
+# train / scoring forward
+# ---------------------------------------------------------------------------
+
+def forward(params, x, cfg: ModelConfig, ctx: MeshCtx, *, window: int = 0,
+            q_chunk: int = 512, remat: bool = True, unroll: int = 1):
+    """x: (B, S, d) → (B, S, d); returns (out, moe_aux_loss)."""
+
+    def body(carry, pparams):
+        h, aux = carry
+        for i, slot in enumerate(cfg.slots):
+            sp = pparams[f"slot{i}"]
+            z = common.rmsnorm(h, sp["norm1"])
+            if slot.mixer == "attn":
+                h = h + attention.forward(sp["mixer"], z, cfg, ctx,
+                                          q_chunk=q_chunk, window=window)
+            else:
+                h = h + mamba2.forward(sp["mixer"], z, cfg, ctx)
+            if slot.ffn != "none":
+                z = common.rmsnorm(h, sp["norm2"])
+                if slot.ffn == "moe":
+                    y, a = moe.forward(sp["ffn"], z, cfg, ctx)
+                    h, aux = h + y, aux + a
+                else:
+                    h = h + mlp.forward(sp["ffn"], z, cfg, ctx)
+        return (h, aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), params,
+                           unroll=unroll)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, model_shards: int, batch_local: int,
+               seq_local: int, dtype=jnp.float32):
+    """Stacked (num_periods, ...) cache tree matching the block structure."""
+    hl_attn = attention.padded_heads(cfg, model_shards) // model_shards
+    hl_ssm = cfg.ssm_heads // model_shards if cfg.ssm_heads else 0
+
+    def one_period():
+        c = {}
+        for i, slot in enumerate(cfg.slots):
+            if slot.mixer == "attn":
+                c[f"slot{i}"] = attention.init_cache(cfg, batch_local, seq_local, dtype)
+            else:
+                c[f"slot{i}"] = mamba2.init_cache(cfg, batch_local, hl_ssm, dtype)
+        return c
+
+    per = one_period()
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_periods,) + a.shape), per)
+
+
+def cache_pspecs(cfg: ModelConfig, batch_axes, seq_axes):
+    per = {}
+    for i, slot in enumerate(cfg.slots):
+        if slot.mixer == "attn":
+            per[f"slot{i}"] = attention.cache_pspecs(batch_axes, seq_axes)
+        else:
+            per[f"slot{i}"] = mamba2.cache_pspecs(batch_axes)
+    return common.tree_stackspec(per)
+
+
+def decode(params, caches, x, pos, cfg: ModelConfig, ctx: MeshCtx, *,
+           window: int = 0, unroll: int = 1):
+    """One-token decode through the stack. x: (B, 1, d).
+
+    Returns (out, new_caches)."""
+
+    def body(h, inputs):
+        pparams, pcache = inputs
+        newc = {}
+        for i, slot in enumerate(cfg.slots):
+            sp = pparams[f"slot{i}"]
+            z = common.rmsnorm(h, sp["norm1"])
+            if slot.mixer == "attn":
+                y, newc[f"slot{i}"] = attention.decode(
+                    sp["mixer"], z, pcache[f"slot{i}"], pos, cfg, ctx, window=window)
+            else:
+                y, newc[f"slot{i}"] = mamba2.decode(sp["mixer"], z, pcache[f"slot{i}"], cfg, ctx)
+            h = h + y
+            if slot.ffn != "none":
+                z = common.rmsnorm(h, sp["norm2"])
+                if slot.ffn == "moe":
+                    y, _ = moe.forward(sp["ffn"], z, cfg, ctx)
+                    h = h + y
+                else:
+                    h = h + mlp.forward(sp["ffn"], z, cfg, ctx)
+        return h, newc
+
+    x, new_caches = lax.scan(body, x, (params, caches), unroll=unroll)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + emit cache slices
+# ---------------------------------------------------------------------------
+
+def prefill(params, x, cfg: ModelConfig, ctx: MeshCtx, *, window: int = 0,
+            q_chunk: int = 512, unroll: int = 1):
+    """Returns (out, caches) — the cache holds this shard's seq slice."""
+    hl_ssm = 0
+    if cfg.ssm_heads:
+        msz = ctx.model_size() if ctx.model_axis else 1
+        hl_ssm = cfg.ssm_heads // msz
+
+    def body(h, pparams):
+        newc = {}
+        for i, slot in enumerate(cfg.slots):
+            sp = pparams[f"slot{i}"]
+            z = common.rmsnorm(h, sp["norm1"])
+            if slot.mixer == "attn":
+                y, newc[f"slot{i}"] = attention.prefill(
+                    sp["mixer"], z, cfg, ctx, q_chunk=q_chunk, window=window)
+            else:
+                y, state = _mamba_prefill(sp["mixer"], z, cfg, ctx, hl_ssm)
+                newc[f"slot{i}"] = state
+            h = h + y
+            if slot.ffn != "none":
+                z = common.rmsnorm(h, sp["norm2"])
+                if slot.ffn == "moe":
+                    y, _ = moe.forward(sp["ffn"], z, cfg, ctx)
+                    h = h + y
+                else:
+                    h = h + mlp.forward(sp["ffn"], z, cfg, ctx)
+        return h, newc
+
+    x, caches = lax.scan(body, x, params, unroll=unroll)
+    return x, caches
+
+
+def _mamba_prefill(p, x, cfg, ctx, hl):
+    """Run the SSD forward and capture the final recurrent + conv state."""
+    b, s, d = x.shape
+    n, pd = cfg.ssm_state, cfg.ssm_head_dim
+
+    z = x @ p["wz"]
+    xs_pre = x @ p["wx"]
+    xs = jax.nn.silu(mamba2._causal_depthwise_conv(xs_pre, p["conv_x"]))
+    bmat = x @ p["wB"]
+    cmat = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]) + p["dt_bias"])
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(b, s, hl, pd)
+    y, h_fin = mamba2._ssd_scan(xh, dt, bmat, cmat, a_neg, 64)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, hl * pd)
+    y = mamba2._sharded_gated_rmsnorm(y, z, p["norm_scale"], ctx, cfg.ssm_d_inner)
+    out = ctx.psum_model(y @ p["out_proj"])
+    cache = {
+        "conv": xs_pre[:, -(cfg.ssm_conv - 1):, :],
+        "h": h_fin,
+    }
+    return out, cache

@@ -1,0 +1,145 @@
+"""Shared building blocks: TP-aware linears, norms, RoPE, sharded embedding
+and the vocab-sharded cross-entropy.
+
+Sharding convention (Megatron-style tensor parallelism over the ``model``
+axis, expressed as global shapes + PartitionSpecs; ``shard_map`` hands the
+apply functions the *local* slices):
+
+  * column-parallel linear  W (d_in, d_out)        pspec (None, "model")
+  * row-parallel linear     W (d_in, d_out)        pspec ("model", None)
+    → caller must ``ctx.psum_model`` the output
+  * embedding               E (vocab, d)           pspec ("model", None)
+  * replicated params                              pspec (None, ...)
+
+All apply code derives local dims from the local array shapes, so the same
+functions run unsharded (single CPU device) and sharded (inside shard_map).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import MeshCtx
+from repro.core.matrixize import MatrixSpec, NONE as SPEC_NONE
+
+
+def dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(in_axis_size)
+    return jax.random.normal(key, shape, dtype=dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded embedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype=dtype) * 0.02
+
+
+def embed_lookup(table, ids, ctx: MeshCtx):
+    """table is the local (vocab_local, d) slice; ids are global token ids."""
+    vocab_local = table.shape[0]
+    offset = ctx.model_index() * vocab_local
+    local = ids - offset
+    valid = (local >= 0) & (local < vocab_local)
+    local = jnp.clip(local, 0, vocab_local - 1)
+    out = jnp.take(table, local, axis=0)
+    out = jnp.where(valid[..., None], out, 0.0)
+    return ctx.psum_model(out)
+
+
+def sharded_softmax_xent(logits_local, labels, ctx: MeshCtx, vocab: int):
+    """Cross-entropy with vocab-sharded logits (..., vocab_local).
+
+    Returns per-token loss (replicated across the model axis)."""
+    vocab_local = logits_local.shape[-1]
+    offset = ctx.model_index() * vocab_local
+    logits32 = logits_local.astype(jnp.float32)
+
+    # mask padding columns (vocab padded up to a multiple of model size)
+    col = offset + lax.broadcasted_iota(jnp.int32, logits32.shape, logits32.ndim - 1)
+    logits32 = jnp.where(col < vocab, logits32, -jnp.inf)
+
+    # the stabiliser needs no gradient — keeps pmax out of the AD graph
+    local_max = lax.stop_gradient(jnp.max(logits32, axis=-1))
+    gmax = _pmax_model(local_max, ctx)
+    sumexp = jnp.sum(jnp.exp(logits32 - gmax[..., None]), axis=-1)
+    sumexp = ctx.psum_model(sumexp)
+    lse = gmax + jnp.log(sumexp)
+
+    local_label = labels - offset
+    lvalid = (local_label >= 0) & (local_label < vocab_local)
+    ll = jnp.clip(local_label, 0, vocab_local - 1)
+    picked = jnp.take_along_axis(logits32, ll[..., None], axis=-1)[..., 0]
+    label_logit = ctx.psum_model(jnp.where(lvalid, picked, 0.0))
+    return lse - label_logit
+
+
+def _pmax_model(x, ctx: MeshCtx):
+    return lax.pmax(x, ctx.model_axis) if ctx.model_axis else x
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers for specs
+# ---------------------------------------------------------------------------
+
+def stackspec(spec: P) -> P:
+    """Prepend a None (period/layer-stack) dim to a PartitionSpec."""
+    return P(*((None,) + tuple(spec)))
+
+
+def stack_mspec(ms: MatrixSpec) -> MatrixSpec:
+    if not ms.is_compressed():
+        return ms
+    return MatrixSpec(kind=ms.kind, batch_dims=ms.batch_dims + 1)
+
+
+def tree_stackspec(tree):
+    return jax.tree_util.tree_map(
+        stackspec, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def tree_stack_mspec(tree):
+    return jax.tree_util.tree_map(
+        stack_mspec, tree, is_leaf=lambda x: isinstance(x, MatrixSpec))

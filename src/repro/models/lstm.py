@@ -1,0 +1,88 @@
+"""Multi-layer LSTM language model (the paper's WikiText-2 benchmark, §5.3).
+
+Paper configuration (Appendix F, Table 11): vocab 28869, embedding 650,
+3 layers of hidden 650.  Weight matrices W_ih (4h × in) and W_hh (4h × h)
+are the compression targets; biases fall under the bias rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.matrixize import MatrixSpec, NONE as SPEC_NONE
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMConfig:
+    vocab: int = 28869
+    embed: int = 650
+    hidden: int = 650
+    layers: int = 3
+    init_scale: float = 0.05   # encoder init std (tied decoder scales with it)
+
+
+def paper_lstm() -> LSTMConfig:
+    return LSTMConfig()
+
+
+def init(key, cfg: LSTMConfig):
+    keys = iter(jax.random.split(key, 3 + 2 * cfg.layers))
+    params = {"encoder": jax.random.normal(next(keys), (cfg.vocab, cfg.embed)) * cfg.init_scale}
+    for l in range(cfg.layers):
+        d_in = cfg.embed if l == 0 else cfg.hidden
+        params[f"rnn_ih_l{l}"] = jax.random.normal(
+            next(keys), (4 * cfg.hidden, d_in)) / math.sqrt(d_in)
+        params[f"rnn_hh_l{l}"] = jax.random.normal(
+            next(keys), (4 * cfg.hidden, cfg.hidden)) / math.sqrt(cfg.hidden)
+        params[f"bias_l{l}"] = jnp.zeros((4 * cfg.hidden,))
+    # decoder is weight-tied to the encoder (paper Table 11 lists only the
+    # encoder matrix; total 110 MB ⇒ tied embeddings, as in the PyTorch
+    # word_language_model recipe the paper builds on)
+    params["decoder_b"] = jnp.zeros((cfg.vocab,))
+    return params
+
+
+def mspecs(params):
+    def leaf(path, p):
+        return MatrixSpec("matrix", 0) if p.ndim >= 2 else SPEC_NONE
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def _lstm_layer(x, w_ih, w_hh, bias, h0, c0):
+    """x: (B, S, d_in) → (B, S, h)."""
+    hdim = w_hh.shape[1]
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ w_ih.T + h @ w_hh.T + bias
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    (_, _), hs = lax.scan(step, (h0, c0), x.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def forward(params, tokens, cfg: LSTMConfig):
+    b = tokens.shape[0]
+    x = jnp.take(params["encoder"], tokens, axis=0)
+    for l in range(cfg.layers):
+        h0 = jnp.zeros((b, cfg.hidden))
+        x = _lstm_layer(x, params[f"rnn_ih_l{l}"], params[f"rnn_hh_l{l}"],
+                        params[f"bias_l{l}"], h0, h0)
+    return x @ params["encoder"].T + params["decoder_b"]
+
+
+def loss_fn(params, batch, cfg: LSTMConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    logp = jax.nn.log_softmax(logits)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    return loss, {"loss": loss, "ppl": jnp.exp(loss)}

@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Chunked SSD algorithm: within a chunk the recurrence is materialised as a
+(masked, decay-weighted) attention-like matrix; across chunks a scan carries
+the (N × P) state per head.  Decode is the O(1) recurrent update.
+
+Tensor parallelism: d_inner (heads) is column-split over the ``model`` axis;
+B/C projections (ngroups=1) are replicated; out_proj is row-parallel.  The
+gated RMSNorm before out_proj normalises over the *global* d_inner via a
+``psum(model)`` of the local sum of squares.
+
+Per-head vectors (A_log, D, dt_bias) are sharded over the model axis and —
+per the paper's bias rule — aggregated uncompressed by PowerSGD.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import MeshCtx
+from repro.core.matrixize import MatrixSpec, NONE as SPEC_NONE
+from repro.models import common
+from repro.configs.base import ModelConfig
+
+
+def init(key, cfg: ModelConfig, model_shards: int, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    w = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": common.dense_init(ks[0], (d, di), d, dtype),
+        "wx": common.dense_init(ks[1], (d, di), d, dtype),
+        "wB": common.dense_init(ks[2], (d, n), d, dtype),
+        "wC": common.dense_init(ks[3], (d, n), d, dtype),
+        "wdt": common.dense_init(ks[4], (d, h), d, dtype),
+        "conv_x": jax.random.normal(ks[5], (w, di), dtype) * (1.0 / math.sqrt(w)),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)).astype(dtype),
+        "D": jnp.ones((h,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": common.dense_init(ks[6], (di, d), di, dtype),
+    }
+
+
+def pspecs(cfg: ModelConfig):
+    return {
+        "wz": P(None, "model"),
+        "wx": P(None, "model"),
+        "wB": P(None, None),
+        "wC": P(None, None),
+        "wdt": P(None, "model"),
+        "conv_x": P(None, "model"),
+        "dt_bias": P("model"),
+        "A_log": P("model"),
+        "D": P("model"),
+        "norm_scale": P("model"),
+        "out_proj": P("model", None),
+    }
+
+
+def mspecs(cfg: ModelConfig):
+    return {
+        "wz": MatrixSpec("matrix", 0),
+        "wx": MatrixSpec("matrix", 0),
+        "wB": MatrixSpec("matrix", 0),
+        "wC": MatrixSpec("matrix", 0),
+        "wdt": MatrixSpec("matrix", 0),
+        "conv_x": SPEC_NONE,      # tiny depthwise filter — bias rule
+        "dt_bias": SPEC_NONE,
+        "A_log": SPEC_NONE,
+        "D": SPEC_NONE,
+        "norm_scale": SPEC_NONE,
+        "out_proj": MatrixSpec("matrix", 0),
+    }
+
+
+def _sharded_gated_rmsnorm(y, z, scale, ctx: MeshCtx, d_inner_global, eps=1e-6):
+    y = y * jax.nn.silu(z)
+    ss = jnp.sum(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    ss = ctx.psum_model(ss) / d_inner_global
+    return (y * lax.rsqrt(ss + eps)).astype(y.dtype) * scale
+
+
+def _causal_depthwise_conv(x, kernel):
+    """x: (B, S, C); kernel: (w, C) — causal depthwise conv along S."""
+    w = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + xp[:, i : i + x.shape[1]] * kernel[i]
+    return out
+
+
+def forward(params, x, cfg: ModelConfig, ctx: MeshCtx, *, chunk: int = 64):
+    """x: (B, S, d) replicated over the model axis → (B, S, d)."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    p = cfg.ssm_head_dim
+    hl = params["wdt"].shape[1]              # local head count
+    di_local = hl * p
+
+    z = x @ params["wz"]                                     # (B, S, di_l)
+    xs = x @ params["wx"]
+    xs = jax.nn.silu(_causal_depthwise_conv(xs, params["conv_x"]))
+    bmat = x @ params["wB"]                                  # (B, S, N) replicated
+    cmat = x @ params["wC"]
+    dt = jax.nn.softplus((x @ params["wdt"]) + params["dt_bias"])  # (B, S, hl)
+    a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))     # (hl,)
+
+    xh = xs.reshape(b, s, hl, p)
+    y, _ = _ssd_scan(xh, dt, bmat, cmat, a_neg, chunk)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, di_local)
+
+    y = _sharded_gated_rmsnorm(y, z, params["norm_scale"], ctx, cfg.ssm_d_inner)
+    return ctx.psum_model(y @ params["out_proj"])
+
+
+def _ssd_scan(xh, dt, bmat, cmat, a_neg, chunk):
+    """Chunked SSD.  xh: (B,S,H,P), dt: (B,S,H), bmat/cmat: (B,S,N).
+
+    Returns (y: (B,S,H,P), final state h: (B,H,N,P))."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    lc = min(chunk, s)
+    assert s % lc == 0, (s, lc)
+    nc = s // lc
+
+    def split(t):
+        return t.reshape((b, nc, lc) + t.shape[2:]).transpose((1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    xc, dtc = split(xh), split(dt)
+    bc, cc = split(bmat), split(cmat)
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def body(hst, args):
+        xk, dtk, bk, ck = args                     # (B,Lc,H,P) (B,Lc,H) (B,Lc,N)
+        a = dtk.astype(jnp.float32) * a_neg        # (B,Lc,H)
+        cum = jnp.cumsum(a, axis=1)                # inclusive
+        # intra-chunk: scores_ij = C_i·B_j · exp(cum_i − cum_j) · dt_j  (i ≥ j)
+        cb = jnp.einsum("bin,bjn->bij", ck, bk)    # (B,Lc,Lc)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Lc,Lc,H)
+        causal = jnp.tril(jnp.ones((lc, lc), bool))[None, :, :, None]
+        # double-where: exp(decay) overflows in the masked upper triangle
+        # (decay > 0 there), and where(mask, inf, 0) has NaN gradient.
+        decay = jnp.where(causal, decay, 0.0)
+        lmat = jnp.where(causal, jnp.exp(decay), 0.0)
+        scores = cb[..., None] * lmat * dtk[:, None, :, :]       # (B,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xk.astype(jnp.float32))
+        # inter-chunk: y_i += C_i · (exp(cum_i) · h_in)
+        hin_term = jnp.einsum("bin,bhnp->bihp", ck, hst)
+        y_inter = hin_term * jnp.exp(cum)[..., None]
+        # state update: h' = exp(cum_last) h + Σ_j exp(cum_last − cum_j) dt_j B_j ⊗ x_j
+        cl = cum[:, -1, :]                                       # (B,H)
+        w = jnp.exp(cl[:, None, :] - cum) * dtk                  # (B,Lc,H)
+        upd = jnp.einsum("bjh,bjn,bjhp->bhnp", w, bk, xk.astype(jnp.float32))
+        h_new = jnp.exp(cl)[:, :, None, None] * hst + upd
+        return h_new, (y_intra + y_inter)
+
+    h_fin, ys = lax.scan(body, h0, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p).astype(xh.dtype)
+    return y, h_fin
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_local: int, heads_local: int,
+               dtype=jnp.float32):
+    n, p, w, di_l = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv, heads_local * cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch_local, w - 1, di_l), dtype),
+        "h": jnp.zeros((batch_local, heads_local, n, p), jnp.float32),
+    }
+
+
+def cache_pspecs(batch_axes) -> dict:
+    ba = batch_axes if batch_axes else None
+    return {"conv": P(ba, None, "model"), "h": P(ba, "model", None, None)}
+
+
+def decode(params, x, cache, cfg: ModelConfig, ctx: MeshCtx):
+    """One-token recurrent update.  x: (B, 1, d).  Returns (y, new_cache)."""
+    b = x.shape[0]
+    n, p = cfg.ssm_state, cfg.ssm_head_dim
+    hl = params["wdt"].shape[1]
+
+    z = x[:, 0] @ params["wz"]                                # (B, di_l)
+    xs = x[:, 0] @ params["wx"]
+    # causal conv over the cached window + current input
+    w = cfg.ssm_conv
+    window = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)  # (B, w, di_l)
+    xs = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, params["conv_x"]))
+    new_conv = window[:, 1:]
+
+    bvec = x[:, 0] @ params["wB"]                              # (B, N)
+    cvec = x[:, 0] @ params["wC"]
+    dt = jax.nn.softplus(x[:, 0] @ params["wdt"] + params["dt_bias"])  # (B, hl)
+    a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(b, hl, p).astype(jnp.float32)
+    decay = jnp.exp(dt.astype(jnp.float32) * a_neg)            # (B, hl)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt.astype(jnp.float32), bvec.astype(jnp.float32), xh)
+    h_new = decay[:, :, None, None] * cache["h"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cvec.astype(jnp.float32), h_new)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, hl * p).astype(x.dtype)
+
+    y = _sharded_gated_rmsnorm(y, z, params["norm_scale"], ctx, cfg.ssm_d_inner)
+    out = ctx.psum_model(y @ params["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "h": h_new}

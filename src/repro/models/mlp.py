@@ -1,0 +1,41 @@
+"""SwiGLU feed-forward, column+row tensor-parallel (Megatron pattern)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import MeshCtx
+from repro.core.matrixize import MatrixSpec
+from repro.models import common
+from repro.configs.base import ModelConfig
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32, d_ff=None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": common.dense_init(kg, (d, ff), d, dtype),
+        "w_up": common.dense_init(ku, (d, ff), d, dtype),
+        "w_down": common.dense_init(kd, (ff, d), ff, dtype),
+    }
+
+
+def pspecs(cfg: ModelConfig):
+    return {
+        "w_gate": P(None, "model"),
+        "w_up": P(None, "model"),
+        "w_down": P("model", None),
+    }
+
+
+def mspecs(cfg: ModelConfig):
+    return {k: MatrixSpec("matrix", 0) for k in ("w_gate", "w_up", "w_down")}
+
+
+def forward(params, x, cfg: ModelConfig, ctx: MeshCtx):
+    """x: (B, S, d) replicated over the model axis; output likewise."""
+    gate = jax.nn.silu(x @ params["w_gate"])
+    up = x @ params["w_up"]
+    return ctx.psum_model((gate * up) @ params["w_down"])

@@ -1,0 +1,152 @@
+"""Full language model: embeddings / modality frontends → block stack →
+final norm → vocab-sharded head, plus loss, decode and prefill entry points.
+
+This is the composable model definition every config instantiates; the
+launcher wraps these functions in ``shard_map`` and the smoke tests call them
+directly with the single-device :data:`repro.core.dist.SINGLE` context.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import MeshCtx, SINGLE
+from repro.core.matrixize import MatrixSpec, NONE as SPEC_NONE
+from repro.models import attention, blocks, common
+from repro.configs.base import ModelConfig
+
+
+def padded_vocab(cfg: ModelConfig, model_shards: int) -> int:
+    v = cfg.vocab_size
+    return ((v + model_shards - 1) // model_shards) * model_shards
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig, model_shards: int = 1):
+    dtype = cfg.jnp_dtype()
+    ke, kb, kh, kp = jax.random.split(key, 4)
+    vp = padded_vocab(cfg, model_shards)
+    params: Dict[str, Any] = {
+        "embed": common.embed_init(ke, vp, cfg.d_model, dtype),
+        "blocks": blocks.init(kb, cfg, model_shards, dtype),
+        "final_norm": common.rmsnorm_init(cfg.d_model, dtype),
+        "head": common.dense_init(kh, (cfg.d_model, vp), cfg.d_model, dtype),
+    }
+    if cfg.frontend == "vision":
+        params["frontend_proj"] = common.dense_init(
+            kp, (cfg.frontend_dim, cfg.d_model), cfg.frontend_dim, dtype)
+    return params
+
+
+def pspecs(cfg: ModelConfig):
+    s = {
+        "embed": P("model", None),
+        "blocks": blocks.pspecs(cfg),
+        "final_norm": P(None),
+        "head": P(None, "model"),
+    }
+    if cfg.frontend == "vision":
+        s["frontend_proj"] = P(None, None)
+    return s
+
+
+def mspecs(cfg: ModelConfig):
+    s = {
+        "embed": MatrixSpec("matrix", 0),
+        "blocks": blocks.mspecs(cfg),
+        "final_norm": SPEC_NONE,
+        "head": MatrixSpec("matrix", 0),
+    }
+    if cfg.frontend == "vision":
+        s["frontend_proj"] = MatrixSpec("matrix", 0)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# input embedding (tokens and/or frontend-stub embeddings)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch, cfg: ModelConfig, ctx: MeshCtx):
+    """batch: {"tokens": (B,S) int32} and, for VLMs,
+    {"patches": (B, S_img, frontend_dim)} — patches occupy the sequence
+    prefix (anyres tiles), text tokens follow."""
+    x = common.embed_lookup(params["embed"], batch["tokens"], ctx)
+    if cfg.frontend == "vision" and "patches" in batch:
+        proj = batch["patches"].astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([proj, x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# train forward + loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: MeshCtx = SINGLE, *,
+            window: int = 0, q_chunk: int = 512, remat: bool = True,
+            unroll: int = 1):
+    """batch: tokens (B,S), labels (B,S) [-1 = masked], optional patches.
+
+    Returns (loss, metrics).  The loss is the mean over this worker's local
+    tokens — exactly the per-worker stochastic gradient PowerSGD expects."""
+    x = embed_inputs(params, batch, cfg, ctx)
+    x, moe_aux = blocks.forward(params["blocks"], x, cfg, ctx,
+                                window=window, q_chunk=q_chunk, remat=remat,
+                                unroll=unroll)
+    x = common.rmsnorm(x, params["final_norm"])
+
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "patches" in batch:
+        # patches carry no LM loss; score only the text suffix
+        n_img = batch["patches"].shape[1]
+        x = x[:, n_img:]
+    logits_local = x @ params["head"]
+    tok_loss = common.sharded_softmax_xent(logits_local, labels, ctx, cfg.vocab_size)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(tok_loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.moe_aux_weight * moe_aux
+    return total, {"lm_loss": loss, "moe_aux": moe_aux}
+
+
+# ---------------------------------------------------------------------------
+# decode / prefill
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, model_shards: int, batch_local: int,
+               seq_local: int, dtype=jnp.float32):
+    return blocks.init_cache(cfg, model_shards, batch_local, seq_local, dtype)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
+                ctx: MeshCtx = SINGLE, *, window: int = 0, unroll: int = 1):
+    """tokens: (B, 1) int32; pos: scalar int32 — position being generated.
+
+    Returns (next_token (B,1) int32, logits (B,1,vocab_pad), new_cache)."""
+    x = common.embed_lookup(params["embed"], tokens, ctx)
+    x, new_cache = blocks.decode(params["blocks"], cache, x, pos, cfg, ctx,
+                                 window=window, unroll=unroll)
+    x = common.rmsnorm(x, params["final_norm"])
+    logits_local = x @ params["head"]
+    logits = ctx.all_gather_model(logits_local, axis=-1)
+    nxt = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    return nxt, logits, new_cache
+
+
+def prefill_step(params, batch, cfg: ModelConfig, ctx: MeshCtx = SINGLE, *,
+                 window: int = 0, q_chunk: int = 512, unroll: int = 1):
+    """Run the prompt through the stack, returning (last_logits, cache)."""
+    x = embed_inputs(params, batch, cfg, ctx)
+    x, cache = blocks.prefill(params["blocks"], x, cfg, ctx,
+                              window=window, q_chunk=q_chunk, unroll=unroll)
+    x = common.rmsnorm(x[:, -1:, :], params["final_norm"])
+    logits_local = x @ params["head"]
+    logits = ctx.all_gather_model(logits_local, axis=-1)
+    return logits, cache

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts layer with top-k routing, capacity-based dispatch and
+expert parallelism over the ``model`` axis.
+
+Activations are replicated within a model group (Megatron pattern), so each
+shard holds E/model_shards experts and processes the tokens routed to *its*
+experts — no all-to-all is required; expert outputs combine with one
+``psum(model)``.  The router is replicated (its gradient is identical on all
+model shards by construction).
+
+Dispatch uses the standard capacity-factor scheme: per expert, the first
+C = ceil(T·k/E · cf) routed tokens are kept, the rest are dropped (their
+residual path passes through).  Aux load-balance loss follows Switch/GShard:
+E · Σ_e f_e · p_e.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import MeshCtx
+from repro.core.matrixize import MatrixSpec, NONE as SPEC_NONE
+from repro.models import common
+from repro.configs.base import ModelConfig
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe_num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": common.dense_init(kr, (d, e), d, dtype),
+        "w_gate": common.dense_init(kg, (e, d, ff), d, dtype),
+        "w_up": common.dense_init(ku, (e, d, ff), d, dtype),
+        "w_down": common.dense_init(kd, (e, ff, d), ff, dtype),
+    }
+
+
+def pspecs(cfg: ModelConfig):
+    return {
+        "router": P(None, None),
+        "w_gate": P("model", None, None),
+        "w_up": P("model", None, None),
+        "w_down": P("model", None, None),
+    }
+
+
+def mspecs(cfg: ModelConfig):
+    return {
+        "router": MatrixSpec("matrix", 0),
+        "w_gate": MatrixSpec("matrix", 1),   # expert dim is a compressor batch dim
+        "w_up": MatrixSpec("matrix", 1),
+        "w_down": MatrixSpec("matrix", 1),
+    }
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(math.ceil(tokens * cfg.moe_top_k / cfg.moe_num_experts
+                      * cfg.moe_capacity_factor))
+    return max(8, min(c, tokens))
+
+
+def forward(params, x, cfg: ModelConfig, ctx: MeshCtx):
+    """x: (B, S, d) replicated over the model axis.  Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.moe_num_experts
+    k = cfg.moe_top_k
+    e_local = params["w_gate"].shape[0]
+    cap = capacity(cfg, t)
+
+    xt = x.reshape(t, d)
+    logits = (xt @ params["router"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = lax.top_k(probs, k)                      # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (replicated; computed from local tokens) ----
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.zeros((e,)).at[experts.reshape(-1)].add(
+        jnp.ones((t * k,)) / (t * k))
+    aux = e * jnp.sum(me * ce)
+
+    # ---- capacity positions: rank of each (token, slot) within its expert --
+    fe = experts.reshape(-1)                                  # (T·k,) routing order
+    onehot = jax.nn.one_hot(fe, e, dtype=jnp.int32)           # (T·k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                 # entries before me
+    pos = jnp.sum(pos * onehot, axis=-1)                      # (T·k,)
+    keep = pos < cap
+
+    # ---- dispatch to *local* experts -------------------------------------
+    lo = ctx.model_index() * e_local
+    local = (fe >= lo) & (fe < lo + e_local) & keep
+    slot = jnp.where(local, (fe - lo) * cap + pos, e_local * cap)  # dump slot
+    token_of = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e_local * cap + 1, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(local[:, None], xt[token_of], 0.0))
+    h = buf[: e_local * cap].reshape(e_local, cap, d)
+
+    # ---- expert FFNs (SwiGLU) ---------------------------------------------
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, params["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", g * u, params["w_down"])
+    y = y.reshape(e_local * cap, d)
+    y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+
+    # ---- combine: gather back, weight by gate, sum over k and shards -------
+    contrib = y[slot] * jnp.where(local, gates.reshape(-1), 0.0)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[token_of].add(contrib)
+    out = ctx.psum_model(out)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,154 @@
+"""CIFAR ResNet18 in pure JAX (the paper's main benchmark model, §5).
+
+Conv kernels are stored (O, I, kh, kw) so the compressor's "conv" matrixize
+rule reproduces the paper's Table 10 flattening (O × I·kh·kw) exactly.
+BatchNorm uses batch statistics in training; running stats are carried in a
+separate state tree.  BN scales/biases fall under the paper's bias rule
+(aggregated uncompressed, no weight decay).
+
+``width=64, blocks=(2,2,2,2)`` is the paper's exact ResNet18; benchmarks use
+scaled-down widths to fit the CPU budget (bytes accounting stays analytic).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.matrixize import MatrixSpec, NONE as SPEC_NONE
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    width: int = 64
+    blocks: Tuple[int, ...] = (2, 2, 2, 2)
+    num_classes: int = 10
+    in_channels: int = 3
+
+
+def paper_resnet18() -> ResNetConfig:
+    return ResNetConfig(width=64, blocks=(2, 2, 2, 2), num_classes=10)
+
+
+def _conv_init(key, o, i, kh, kw):
+    fan_in = i * kh * kw
+    return jax.random.normal(key, (o, i, kh, kw)) * math.sqrt(2.0 / fan_in)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def init(key, cfg: ResNetConfig):
+    keys = iter(jax.random.split(key, 64))
+    w = cfg.width
+    params = {"conv1": _conv_init(next(keys), w, cfg.in_channels, 3, 3),
+              "bn1": _bn_init(w)}
+    state = {"bn1": _bn_state(w)}
+    in_c = w
+    for si, n in enumerate(cfg.blocks):
+        out_c = w * (2 ** si)
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            name = f"layer{si}_{bi}"
+            blk = {
+                "conv1": _conv_init(next(keys), out_c, in_c, 3, 3),
+                "bn1": _bn_init(out_c),
+                "conv2": _conv_init(next(keys), out_c, out_c, 3, 3),
+                "bn2": _bn_init(out_c),
+            }
+            bst = {"bn1": _bn_state(out_c), "bn2": _bn_state(out_c)}
+            if stride != 1 or in_c != out_c:
+                blk["shortcut"] = _conv_init(next(keys), out_c, in_c, 1, 1)
+                blk["bn_s"] = _bn_init(out_c)
+                bst["bn_s"] = _bn_state(out_c)
+            params[name] = blk
+            state[name] = bst
+            in_c = out_c
+    params["linear"] = {
+        "w": jax.random.normal(next(keys), (cfg.num_classes, in_c)) / math.sqrt(in_c),
+        "b": jnp.zeros((cfg.num_classes,)),
+    }
+    return params, state
+
+
+def _bn_state(c):
+    return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def mspecs(params):
+    """Matrix specs: convs via the paper's (O, I·kh·kw) rule; BN/bias exempt."""
+
+    def leaf(path, p):
+        if p.ndim == 4:
+            return MatrixSpec("conv", 0)
+        if p.ndim == 2:
+            return MatrixSpec("matrix", 0)
+        return SPEC_NONE
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def _conv(x, w, stride):
+    return lax.conv_general_dilated(
+        x, jnp.transpose(w, (2, 3, 1, 0)),           # OIHW → HWIO
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(x, p, s, train: bool, momentum=0.9, eps=1e-5):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mean,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+def forward(params, state, x, cfg: ResNetConfig, train: bool = True):
+    """x: (B, H, W, C) → (logits, new_bn_state)."""
+    new_state = {}
+    h = _conv(x, params["conv1"], 1)
+    h, new_state["bn1"] = _bn(h, params["bn1"], state["bn1"], train)
+    h = jax.nn.relu(h)
+    in_c = cfg.width
+    for si, n in enumerate(cfg.blocks):
+        out_c = cfg.width * (2 ** si)
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            name = f"layer{si}_{bi}"
+            blk, bst = params[name], state[name]
+            nst = {}
+            y = _conv(h, blk["conv1"], stride)
+            y, nst["bn1"] = _bn(y, blk["bn1"], bst["bn1"], train)
+            y = jax.nn.relu(y)
+            y = _conv(y, blk["conv2"], 1)
+            y, nst["bn2"] = _bn(y, blk["bn2"], bst["bn2"], train)
+            if "shortcut" in blk:
+                sc = _conv(h, blk["shortcut"], stride)
+                sc, nst["bn_s"] = _bn(sc, blk["bn_s"], bst["bn_s"], train)
+            else:
+                sc = h
+            h = jax.nn.relu(y + sc)
+            new_state[name] = nst
+            in_c = out_c
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ params["linear"]["w"].T + params["linear"]["b"]
+    return logits, new_state
+
+
+def loss_fn(params, state, batch, cfg: ResNetConfig, train: bool = True):
+    logits, new_state = forward(params, state, batch["images"], cfg, train)
+    onehot = jax.nn.one_hot(batch["labels"], cfg.num_classes)
+    loss = -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+    return loss, (new_state, {"loss": loss, "acc": acc})

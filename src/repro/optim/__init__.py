@@ -1,0 +1,3 @@
+from repro.optim.sgd import (SGDState, sgd_init, sgd_apply,
+                             SignumState, signum_init, signum_apply)
+from repro.optim import schedules

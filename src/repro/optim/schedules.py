@@ -1,0 +1,32 @@
+"""Learning-rate schedules (paper §5: linear warmup from the 1-worker rate,
+/10 step decay; plus cosine for the Appendix-D transformer recipe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, base_lr, warmup_steps, start_frac):
+    """Linear warmup from start_frac·base_lr to base_lr (paper: 1/W → 1)."""
+    frac = jnp.clip(step / jnp.maximum(warmup_steps, 1), 0.0, 1.0)
+    return base_lr * (start_frac + (1.0 - start_frac) * frac)
+
+
+def step_decay(step, lr, milestones, factor=0.1):
+    """Divide by 1/factor at each milestone (paper: /10 at epochs 150, 250)."""
+    for m in milestones:
+        lr = jnp.where(step >= m, lr * factor, lr)
+    return lr
+
+
+def cosine(step, base_lr, total_steps, min_frac=0.0):
+    t = jnp.clip(step / jnp.maximum(total_steps, 1), 0.0, 1.0)
+    return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+
+def paper_cifar_schedule(step, base_lr, num_workers, steps_per_epoch):
+    """The paper's full CIFAR10 recipe: 5-epoch linear warmup from the
+    single-worker LR to W× that, then /10 at epochs 150 and 250."""
+    lr = linear_warmup(step, base_lr * num_workers,
+                       5 * steps_per_epoch, 1.0 / num_workers)
+    return step_decay(step, lr, (150 * steps_per_epoch, 250 * steps_per_epoch))

@@ -1,0 +1,73 @@
+"""Plain SGD with momentum (the paper's full-precision baseline), and
+Signum (Bernstein et al., 2019) — sign-of-momentum with majority vote —
+which the paper benchmarks against (§5.2, Appendix G.5).
+
+These are standalone optimizers (not EF compressors): Signum aggregates
+1-bit gradients by majority vote instead of averaging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dist import MeshCtx, SINGLE
+
+
+@dataclasses.dataclass
+class SGDState:
+    momentum: Any
+    step: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    SGDState, data_fields=["momentum", "step"], meta_fields=[])
+
+
+def sgd_init(params) -> SGDState:
+    return SGDState(momentum=jax.tree_util.tree_map(jnp.zeros_like, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def sgd_apply(params, grads, state: SGDState, *, lr, momentum=0.9,
+              weight_decay=0.0, ctx: MeshCtx = SINGLE):
+    """Synchronous data-parallel SGD: all-reduce mean of raw gradients."""
+    grads = jax.tree_util.tree_map(ctx.pmean_data, grads)
+    if weight_decay:
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p, grads, params)
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: momentum * m + g, state.momentum, grads)
+    new_p = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, new_m)
+    return new_p, SGDState(momentum=new_m, step=state.step + 1)
+
+
+@dataclasses.dataclass
+class SignumState:
+    momentum: Any
+    step: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    SignumState, data_fields=["momentum", "step"], meta_fields=[])
+
+
+def signum_init(params) -> SignumState:
+    return SignumState(momentum=jax.tree_util.tree_map(jnp.zeros_like, params),
+                       step=jnp.zeros((), jnp.int32))
+
+
+def signum_apply(params, grads, state: SignumState, *, lr, momentum=0.9,
+                 ctx: MeshCtx = SINGLE):
+    """Signum: per-worker momentum, sign compression, majority-vote
+    aggregation (psum of ±1, then sign).  Not linear ⇒ all-gather in the
+    paper; on TPU the vote maps onto a psum of int8 signs."""
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: momentum * m + (1 - momentum) * g, state.momentum, grads)
+    votes = jax.tree_util.tree_map(lambda m: ctx.psum_data(jnp.sign(m)), new_m)
+    new_p = jax.tree_util.tree_map(
+        lambda p, v: p - lr * jnp.sign(v), params, votes)
+    return new_p, SignumState(momentum=new_m, step=state.step + 1)

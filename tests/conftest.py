@@ -1,0 +1,11 @@
+import os
+import sys
+
+# make `import repro` work regardless of how pytest is invoked
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(SRC))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device.  Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves.

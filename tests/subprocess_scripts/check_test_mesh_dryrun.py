@@ -1,0 +1,54 @@
+"""Subprocess check: the dry-run machinery (lower + compile + roofline)
+works end-to-end on the CI-sized test meshes (2×2 and 2×2×2) for one
+architecture per family and all four step kinds."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.configs.base import get_config, InputShape
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as roofline_lib
+from repro.launch.train import TrainHyper, make_train_step
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.launch import specs as specs_lib
+
+
+def main():
+    for multi_pod in (False, True):
+        mesh = mesh_lib.make_test_mesh(multi_pod=multi_pod)
+        for arch in ["llama3-8b", "mamba2-1.3b", "qwen3-moe-30b-a3b"]:
+            cfg = get_config(arch, reduced=True)
+            hyper = TrainHyper(q_chunk=32, remat=True)
+            # train
+            shape = InputShape("t", 128, 8, "train")
+            step_fn, abstract_state, _ = make_train_step(cfg, mesh, hyper)
+            params_sds, ef_sds = abstract_state()
+            batch = specs_lib.with_sharding(
+                specs_lib.batch_specs(cfg, shape),
+                specs_lib.batch_pspecs(cfg, shape, mesh_lib.data_axes(mesh)),
+                mesh)
+            key = jax.eval_shape(lambda: jax.random.key(0))
+            compiled = step_fn.lower(params_sds, ef_sds, batch, key).compile()
+            roof = roofline_lib.analyse(compiled, chips=8)
+            assert roof.flops > 0 and roof.coll_bytes > 0
+            # prefill + decode
+            pf, pf_abs = make_prefill_step(cfg, mesh,
+                                           InputShape("p", 128, 8, "prefill"),
+                                           q_chunk=32)
+            pf.lower(*pf_abs()).compile()
+            dc, dc_abs = make_decode_step(cfg, mesh,
+                                          InputShape("d", 128, 8, "decode"))
+            dc.lower(*dc_abs()).compile()
+            print(f"mesh={'2x2x2' if multi_pod else '2x2'} {arch}: ok "
+                  f"(coll={roof.coll_bytes:.2e}B)")
+    print("TEST_MESH_DRYRUN_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import matrixize
+from repro.core.compressors import (ExactRankK, IdentityCompressor, RandomBlock,
+                                    RandomK, SignNorm, SpectralAtomo, TopK,
+                                    UnbiasedRankK, make_compressor)
+
+KEY = jax.random.key(0)
+
+
+def _problem(shape=(40, 30), seed=0):
+    m = jax.random.normal(jax.random.key(seed), shape)
+    grads = {"w": m, "b": jnp.ones((7,))}
+    specs = {"w": matrixize.default_spec(m),
+             "b": matrixize.default_spec(grads["b"])}
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
+    return grads, specs, shapes
+
+
+ALL = ["identity", "powersgd", "powersgd_cold", "powersgd_best_approx",
+       "unbiased_rank_k", "random_block", "random_k", "sign_norm", "top_k",
+       "spectral_atomo", "exact_rank_k"]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_shapes_and_finiteness(name):
+    grads, specs, shapes = _problem()
+    comp = make_compressor(name, rank=2)
+    state = comp.init(shapes, specs, KEY)
+    out = comp.step(grads, state, specs, key=KEY)
+    for k in grads:
+        assert out.agg[k].shape == grads[k].shape
+        assert out.recon[k].shape == grads[k].shape
+        assert bool(jnp.all(jnp.isfinite(out.agg[k])))
+    # bias passes through exactly for every scheme
+    np.testing.assert_array_equal(np.asarray(out.agg["b"]), np.ones(7))
+
+
+def test_identity_lossless():
+    grads, specs, shapes = _problem()
+    out = IdentityCompressor().step(grads, None, specs, key=KEY)
+    np.testing.assert_array_equal(np.asarray(out.agg["w"]), np.asarray(grads["w"]))
+
+
+def test_unbiased_rank_k_is_unbiased():
+    """E[(MU)Uᵀ] = M (§4.1) — check the sample mean converges."""
+    grads, specs, shapes = _problem(shape=(12, 10))
+    comp = UnbiasedRankK(rank=2)
+    acc = np.zeros((12, 10))
+    trials = 3000
+    for i in range(trials):
+        out = comp.step(grads, None, specs, key=jax.random.key(i))
+        acc += np.asarray(out.recon["w"])
+    acc /= trials
+    err = np.abs(acc - np.asarray(grads["w"])).mean()
+    scale = np.abs(np.asarray(grads["w"])).mean()
+    assert err < 0.15 * scale
+
+
+def test_atomo_is_unbiased():
+    grads, specs, shapes = _problem(shape=(8, 6))
+    comp = SpectralAtomo(rank=2, attempts=16)
+    acc = np.zeros((8, 6))
+    trials = 1500
+    for i in range(trials):
+        out = comp.step(grads, None, specs, key=jax.random.key(i))
+        acc += np.asarray(out.recon["w"])
+    acc /= trials
+    err = np.abs(acc - np.asarray(grads["w"])).mean()
+    scale = np.abs(np.asarray(grads["w"])).mean()
+    assert err < 0.2 * scale
+
+
+def test_top_k_keeps_largest():
+    grads, specs, shapes = _problem()
+    comp = TopK(rank=1)
+    out = comp.step(grads, specs=specs, state=None, key=KEY)
+    recon = np.asarray(out.recon["w"]).ravel()
+    orig = np.asarray(grads["w"]).ravel()
+    kept = recon != 0
+    b = kept.sum()
+    assert b == min((40 + 30) * 1, orig.size)
+    thresh = np.sort(np.abs(orig))[-b]
+    assert np.all(np.abs(orig[kept]) >= thresh - 1e-6)
+
+
+def test_random_block_is_contiguous():
+    grads, specs, shapes = _problem()
+    comp = RandomBlock(rank=1)
+    out = comp.step(grads, None, specs, key=KEY)
+    nz = np.nonzero(np.asarray(out.recon["w"]).ravel())[0]
+    assert len(nz) > 0
+    assert nz[-1] - nz[0] + 1 == len(nz)  # one contiguous slice
+
+
+def test_sign_norm_magnitude():
+    grads, specs, shapes = _problem()
+    out = SignNorm(rank=1).step(grads, None, specs, key=KEY)
+    recon = np.asarray(out.recon["w"])
+    l1 = np.abs(np.asarray(grads["w"])).mean()
+    vals = np.unique(np.round(np.abs(recon), 6))
+    assert len(vals) == 1
+    np.testing.assert_allclose(vals[0], l1, rtol=1e-5)
+
+
+def test_exact_rank_k_is_optimal():
+    grads, specs, shapes = _problem()
+    exact = ExactRankK(rank=2).step(grads, None, specs, key=KEY)
+    # any other rank-2 reconstruction must be at least as far from M
+    psgd = make_compressor("powersgd_best_approx", rank=2)
+    st = psgd.init(shapes, specs, KEY)
+    out = psgd.step(grads, st, specs, key=KEY)
+    e_exact = float(jnp.linalg.norm(grads["w"] - exact.agg["w"]))
+    e_psgd = float(jnp.linalg.norm(grads["w"] - out.agg["w"]))
+    assert e_exact <= e_psgd + 1e-4
+
+
+def test_sparsifier_budgets_match_powersgd():
+    """Appendix G: sparsifier budget b = (n+m)·r coordinates."""
+    grads, specs, shapes = _problem()
+    for cls in (RandomK, TopK):
+        out = cls(rank=2).step(grads, None, specs, key=KEY)
+        nz = int((np.asarray(out.recon["w"]) != 0).sum())
+        assert nz == (40 + 30) * 2
+
+
+def test_allreduce_flags():
+    """§5.1: linear schemes support all-reduce, sign/top-k/atomo do not."""
+    assert make_compressor("powersgd").allreduce
+    assert make_compressor("random_block").allreduce
+    assert make_compressor("random_k").allreduce
+    assert make_compressor("unbiased_rank_k").allreduce
+    assert not make_compressor("sign_norm").allreduce
+    assert not make_compressor("top_k").allreduce
+    assert not make_compressor("spectral_atomo").allreduce

@@ -1,0 +1,104 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.integers(1, 300),
+    k=st.integers(1, 300),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_project_matches_ref(n, k, r, seed):
+    key = jax.random.key(seed)
+    m = jax.random.normal(key, (n, k))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (k, r))
+    got = ops.lowrank_project(m, q, block_n=64, block_k=64)
+    want = ref.lowrank_project(m, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.integers(1, 300),
+    k=st.integers(1, 300),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_backproject_matches_ref(n, k, r, seed):
+    key = jax.random.key(seed)
+    m = jax.random.normal(key, (n, k))
+    p = jax.random.normal(jax.random.fold_in(key, 1), (n, r))
+    got = ops.lowrank_backproject(m, p, block_n=64, block_k=64)
+    want = ref.lowrank_backproject(m, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,r", [((128, 128), 2), ((257, 511), 4),
+                                     ((64, 1024), 1)])
+def test_project_dtypes(shape, r, dtype):
+    m = jax.random.normal(KEY, shape).astype(dtype)
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (shape[1], r)).astype(dtype)
+    got = ops.lowrank_project(m, q)
+    want = ref.lowrank_project(m, q)
+    atol = 1e-3 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol, rtol=0.05)
+
+
+@pytest.mark.parametrize("batch", [(), (3,), (2, 4)])
+def test_batched(batch):
+    shape = batch + (96, 80)
+    m = jax.random.normal(KEY, shape)
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), batch + (80, 2))
+    got = ops.lowrank_project(m, q, block_n=32, block_k=32)
+    want = ref.lowrank_project(m, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    n=st.integers(2, 200),
+    m=st.integers(2, 200),
+    r=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_ef_apply_matches_ref(n, m, r, seed):
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (n, m))
+    mom = jax.random.normal(jax.random.fold_in(key, 1), (n, m))
+    p = jax.random.normal(jax.random.fold_in(key, 2), (n, r))
+    q = jax.random.normal(jax.random.fold_in(key, 3), (m, r))
+    got_x, got_m = ops.ef_apply(x, mom, p, q, 0.05, 0.9, block_n=64, block_m=64)
+    want_x, want_m = ref.ef_apply(x, mom, p, q, 0.05, 0.9)
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_powersgd_pallas_path_matches_jnp_path():
+    from repro.core import matrixize
+    from repro.core.compressors import PowerSGDCompressor
+
+    grads = {"w": jax.random.normal(KEY, (257, 130))}
+    specs = {"w": matrixize.default_spec(grads["w"])}
+    shapes = {"w": jax.ShapeDtypeStruct((257, 130), jnp.float32)}
+    a = PowerSGDCompressor(rank=2)
+    b = PowerSGDCompressor(rank=2, use_pallas=True)
+    oa = a.step(grads, a.init(shapes, specs, KEY), specs, key=KEY)
+    ob = b.step(grads, b.init(shapes, specs, KEY), specs, key=KEY)
+    np.testing.assert_allclose(np.asarray(oa.agg["w"]), np.asarray(ob.agg["w"]),
+                               atol=1e-4)

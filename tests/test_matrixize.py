@@ -1,0 +1,60 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import matrixize
+from repro.core.matrixize import MatrixSpec
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    n=st.integers(1, 32),
+    m=st.integers(1, 32),
+    b=st.integers(0, 3),
+    seed=st.integers(0, 1000),
+)
+def test_matrix_roundtrip(n, m, b, seed):
+    batch = tuple(np.random.RandomState(seed).randint(1, 4, size=b))
+    shape = batch + (n, m)
+    x = jax.random.normal(jax.random.key(seed), shape)
+    spec = MatrixSpec("matrix", b)
+    mat = matrixize.to_matrix(x, spec)
+    assert mat.shape == batch + (n, m)
+    back = matrixize.from_matrix(mat, shape, spec)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_conv_flattening_matches_paper_table10():
+    """Paper Appendix F: layer4.1.conv2 (512,512,3,3) → 512×4608, 9216 KB,
+    compression 461/r×."""
+    shape = (512, 512, 3, 3)
+    spec = MatrixSpec("conv", 0)
+    ms = matrixize.matrix_shape(shape, spec)
+    assert ms == ((), 512, 4608)
+    uncompressed_kb = int(np.prod(shape)) * 4 // 1024
+    assert uncompressed_kb == 9216
+    r = 1
+    ratio = int(np.prod(shape)) / matrixize.compressed_floats(shape, spec, r)
+    assert abs(ratio - 461) < 1.0  # paper: 461/r×
+
+
+def test_lstm_encoder_matches_paper_table11():
+    """encoder (28869, 650): compression 636/r×."""
+    shape = (28869, 650)
+    spec = MatrixSpec("matrix", 0)
+    ratio = int(np.prod(shape)) / matrixize.compressed_floats(shape, spec, 1)
+    assert abs(ratio - 636) < 1.0
+
+
+def test_vector_exempt():
+    spec = matrixize.default_spec(jax.ShapeDtypeStruct((128,), jnp.float32))
+    assert not spec.is_compressed()
+    assert matrixize.matrix_shape((128,), spec) is None
+    assert matrixize.compressed_floats((128,), spec, 4) == 128
+
+
+def test_default_spec_conv():
+    spec = matrixize.default_spec(jax.ShapeDtypeStruct((64, 3, 3, 3), jnp.float32))
+    assert spec.kind == "conv"
+    assert matrixize.matrix_shape((64, 3, 3, 3), spec) == ((), 64, 27)

@@ -1,0 +1,150 @@
+"""Unit tests for model components (single device)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.dist import SINGLE
+from repro.models import attention, common, mamba2, moe
+
+KEY = jax.random.key(0)
+
+
+def test_sharded_softmax_xent_matches_log_softmax():
+    logits = jax.random.normal(KEY, (4, 9, 32))
+    labels = jax.random.randint(KEY, (4, 9), 0, 32)
+    got = common.sharded_softmax_xent(logits, labels, SINGLE, vocab=32)
+    want = -jnp.take_along_axis(
+        jax.nn.log_softmax(logits), labels[..., None], axis=-1)[..., 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_sharded_softmax_xent_masks_padded_vocab():
+    logits = jnp.concatenate(
+        [jax.random.normal(KEY, (2, 3, 10)), jnp.full((2, 3, 6), 100.0)], -1)
+    labels = jax.random.randint(KEY, (2, 3), 0, 10)
+    got = common.sharded_softmax_xent(logits, labels, SINGLE, vocab=10)
+    want = -jnp.take_along_axis(
+        jax.nn.log_softmax(logits[..., :10]), labels[..., None], -1)[..., 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_rope_is_relative():
+    """q·k after RoPE depends only on the position difference."""
+    hd = 64
+    q = jax.random.normal(KEY, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 1, hd))
+    def dot(p1, p2):
+        qq = common.apply_rope(q, jnp.array([[p1]]), 10000.0)
+        kk = common.apply_rope(k, jnp.array([[p2]]), 10000.0)
+        return float(jnp.sum(qq * kk))
+    assert abs(dot(3, 1) - dot(10, 8)) < 1e-3
+    assert abs(dot(3, 1) - dot(5, 1)) > 1e-4  # but not position-free
+
+
+def test_chunked_attention_matches_dense():
+    cfg = get_config("llama3-8b", reduced=True)
+    p = attention.init(KEY, cfg, 1)
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model)) * 0.1
+    full = attention.forward(p, x, cfg, SINGLE, q_chunk=64)
+    chunked = attention.forward(p, x, cfg, SINGLE, q_chunk=8)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked), atol=2e-4)
+
+
+def test_sliding_window_masks_far_context():
+    """With window w, position i must not attend to j ≤ i−w: perturbing a
+    token outside every query's window leaves those outputs unchanged."""
+    cfg = get_config("llama3-8b", reduced=True)
+    p = attention.init(KEY, cfg, 1)
+    x = jax.random.normal(KEY, (1, 64, cfg.d_model)) * 0.1
+    w = 16
+    out1 = attention.forward(p, x, cfg, SINGLE, q_chunk=16, window=w)
+    x2 = x.at[:, 0].add(10.0)
+    out2 = attention.forward(p, x2, cfg, SINGLE, q_chunk=16, window=w)
+    # queries at positions ≥ 16 cannot see position 0
+    np.testing.assert_allclose(np.asarray(out1[:, w + 1:]),
+                               np.asarray(out2[:, w + 1:]), atol=1e-4)
+    # but position 1 can
+    assert float(jnp.abs(out1[:, 1] - out2[:, 1]).max()) > 1e-4
+
+
+def test_window_attention_matches_full_for_short_seq():
+    cfg = get_config("llama3-8b", reduced=True)
+    p = attention.init(KEY, cfg, 1)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model)) * 0.1
+    full = attention.forward(p, x, cfg, SINGLE, q_chunk=8)
+    win = attention.forward(p, x, cfg, SINGLE, q_chunk=8, window=64)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(win), atol=2e-4)
+
+
+def test_ssd_scan_matches_naive_recurrence():
+    """Chunked SSD vs a direct per-step recurrence."""
+    b, s, h, p, n = 2, 32, 3, 4, 8
+    xh = jax.random.normal(KEY, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, h)))
+    bm = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, n))
+    cm = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, n))
+    a_neg = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 4), (h,)))
+
+    y_chunk, h_fin = mamba2._ssd_scan(xh, dt, bm, cm, a_neg, chunk=8)
+
+    hstate = np.zeros((b, h, n, p))
+    ys = np.zeros((b, s, h, p))
+    for t in range(s):
+        decay = np.exp(np.asarray(dt[:, t]) * np.asarray(a_neg))  # (b,h)
+        upd = np.einsum("bh,bn,bhp->bhnp", np.asarray(dt[:, t]),
+                        np.asarray(bm[:, t]), np.asarray(xh[:, t]))
+        hstate = decay[:, :, None, None] * hstate + upd
+        ys[:, t] = np.einsum("bn,bhnp->bhp", np.asarray(cm[:, t]), hstate)
+    np.testing.assert_allclose(np.asarray(y_chunk), ys, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_fin), hstate, atol=1e-3, rtol=1e-3)
+
+
+def test_moe_no_drops_equals_dense_mixture():
+    """With unlimited capacity, the MoE output equals the explicit
+    gate-weighted sum over selected experts."""
+    import dataclasses
+
+    cfg = get_config("olmoe-1b-7b", reduced=True)
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=100.0)
+    p = moe.init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 8, cfg.d_model)) * 0.5
+    out, aux = moe.forward(p, x, cfg, SINGLE)
+
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, experts = jax.lax.top_k(probs, cfg.moe_top_k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    want = np.zeros_like(np.asarray(xt))
+    for t in range(xt.shape[0]):
+        for j in range(cfg.moe_top_k):
+            e = int(experts[t, j])
+            h = np.asarray(xt[t])
+            g = jax.nn.silu(h @ p["w_gate"][e]) * (h @ p["w_up"][e])
+            want[t] += float(gates[t, j]) * np.asarray(g @ p["w_down"][e])
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, cfg.d_model),
+                               want, atol=1e-3, rtol=1e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    import dataclasses
+
+    cfg = get_config("olmoe-1b-7b", reduced=True)
+    tight = dataclasses.replace(cfg, moe_capacity_factor=0.01)
+    p = moe.init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model))
+    out_t, _ = moe.forward(p, x, tight, SINGLE)
+    out_f, _ = moe.forward(p, x, cfg, SINGLE)
+    assert float(jnp.abs(out_t - out_f).max()) > 1e-6
+
+
+def test_embed_lookup_and_head_padding():
+    cfg = get_config("llama3-8b", reduced=True)
+    table = jax.random.normal(KEY, (cfg.vocab_size, 16))
+    ids = jax.random.randint(KEY, (2, 5), 0, cfg.vocab_size)
+    out = common.embed_lookup(table, ids, SINGLE)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(table[ids]), atol=1e-6)

@@ -1,0 +1,80 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.orthogonalize import cholesky_qr, gram_schmidt
+
+jax.config.update("jax_enable_x64", False)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(4, 96),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_schmidt_orthonormal(n, r, seed):
+    r = min(r, n)
+    p = jax.random.normal(jax.random.key(seed), (n, r))
+    q = gram_schmidt(p)
+    gram = np.asarray(q.T @ q)
+    np.testing.assert_allclose(gram, np.eye(r), atol=2e-3)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(4, 96),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cholesky_qr_orthonormal(n, r, seed):
+    r = min(r, n)
+    p = jax.random.normal(jax.random.key(seed), (n, r))
+    q = cholesky_qr(p)
+    gram = np.asarray(q.T @ q)
+    np.testing.assert_allclose(gram, np.eye(r), atol=2e-3)
+
+
+@pytest.mark.parametrize("orth", [gram_schmidt, cholesky_qr])
+def test_span_preserved(orth):
+    """orthogonalize(P) must span the same subspace as P (Remark 2:
+    orthogonalization is right-multiplication by an invertible R⁻¹)."""
+    key = jax.random.key(0)
+    p = jax.random.normal(key, (40, 4))
+    q = orth(p)
+    # project p onto span(q): should reconstruct p exactly
+    coeff = q.T @ p
+    np.testing.assert_allclose(np.asarray(q @ coeff), np.asarray(p), atol=1e-4)
+
+
+def test_batched_shapes():
+    key = jax.random.key(1)
+    p = jax.random.normal(key, (3, 5, 32, 2))
+    for orth in (gram_schmidt, cholesky_qr):
+        q = orth(p)
+        assert q.shape == p.shape
+        gram = jnp.einsum("...nr,...ns->...rs", q, q)
+        np.testing.assert_allclose(
+            np.asarray(gram), np.broadcast_to(np.eye(2), (3, 5, 2, 2)), atol=2e-3)
+
+
+def test_gs_cholqr_agree_up_to_sign():
+    """Both produce orthonormal bases of the same span; columns may differ
+    only by an orthogonal transform — check the projection operators match."""
+    key = jax.random.key(2)
+    p = jax.random.normal(key, (64, 4))
+    q1, q2 = gram_schmidt(p), cholesky_qr(p)
+    proj1 = np.asarray(q1 @ q1.T)
+    proj2 = np.asarray(q2 @ q2.T)
+    np.testing.assert_allclose(proj1, proj2, atol=1e-3)
+
+
+def test_tiny_values_stable():
+    """Gradients can be ~1e-20 early in training; no NaNs allowed."""
+    key = jax.random.key(3)
+    p = jax.random.normal(key, (32, 2)) * 1e-20
+    for orth in (gram_schmidt, cholesky_qr):
+        q = orth(p)
+        assert bool(jnp.all(jnp.isfinite(q)))

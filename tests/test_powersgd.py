@@ -1,0 +1,156 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import matrixize, powersgd
+from repro.core.compressors import ExactRankK, PowerSGDCompressor
+from repro.core.powersgd import PowerSGDConfig
+
+
+def _setup(shape=(50, 40), rank=2, seed=0, **kw):
+    key = jax.random.key(seed)
+    m = jax.random.normal(key, shape)
+    grads = {"w": m}
+    specs = {"w": matrixize.default_spec(m, batch_dims=max(0, m.ndim - 2))}
+    shapes = {"w": jax.ShapeDtypeStruct(m.shape, m.dtype)}
+    comp = PowerSGDCompressor(rank=rank, **kw)
+    state = comp.init(shapes, specs, key)
+    return comp, grads, state, specs, key
+
+
+def test_warm_start_converges_to_best_rank_r():
+    """Theorem I: repeated warm-started subspace iteration on a FIXED matrix
+    recovers the best rank-r approximation."""
+    comp, grads, state, specs, key = _setup(rank=2)
+    for _ in range(80):
+        out = comp.step(grads, state, specs, key=key)
+        state = out.state
+    exact = ExactRankK(rank=2).step(grads, None, specs, key=key)
+    err_psgd = float(jnp.linalg.norm(grads["w"] - out.agg["w"]))
+    err_best = float(jnp.linalg.norm(grads["w"] - exact.agg["w"]))
+    assert err_psgd <= err_best * 1.001
+
+
+def test_single_iteration_worse_than_converged():
+    comp, grads, state, specs, key = _setup(rank=2)
+    out1 = comp.step(grads, state, specs, key=key)
+    state2 = out1.state
+    for _ in range(40):
+        out = comp.step(grads, state2, specs, key=key)
+        state2 = out.state
+    e1 = float(jnp.linalg.norm(grads["w"] - out1.agg["w"]))
+    e2 = float(jnp.linalg.norm(grads["w"] - out.agg["w"]))
+    assert e2 <= e1 + 1e-5
+
+
+def test_best_approx_variant_matches_svd():
+    """Appendix G.7: 4 cold-start subspace iterations ≈ best approximation."""
+    comp, grads, state, specs, key = _setup(rank=2, warm_start=False, num_iters=4)
+    out = comp.step(grads, state, specs, key=key)
+    exact = ExactRankK(rank=2).step(grads, None, specs, key=key)
+    err = float(jnp.linalg.norm(grads["w"] - out.agg["w"]))
+    err_best = float(jnp.linalg.norm(grads["w"] - exact.agg["w"]))
+    assert err <= err_best * 1.05
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    n=st.integers(4, 64),
+    m=st.integers(4, 64),
+    r=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_rank_budget_and_shape(n, m, r, seed):
+    comp, grads, state, specs, key = _setup(shape=(n, m), rank=r, seed=seed)
+    out = comp.step(grads, state, specs, key=key)
+    assert out.agg["w"].shape == (n, m)
+    # reconstruction has rank ≤ r (vacuous when r ≥ min(n, m): the
+    # factorisation P̂Qᵀ may then be full rank, which is correct)
+    if r < min(n, m):
+        s = jnp.linalg.svd(out.agg["w"], compute_uv=False)
+        assert float(s[r:].sum()) < 1e-3 * max(1.0, float(s[0]))
+    # message size: r·(n+m) floats
+    assert out.bits_per_worker == r * (n + m) * 32
+
+
+def test_higher_rank_better_approximation():
+    errs = []
+    for r in (1, 2, 4, 8):
+        comp, grads, state, specs, key = _setup(rank=r, seed=3)
+        for _ in range(10):
+            out = comp.step(grads, state, specs, key=key)
+            state = out.state
+        errs.append(float(jnp.linalg.norm(grads["w"] - out.agg["w"])))
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_vector_params_uncompressed():
+    key = jax.random.key(0)
+    grads = {"b": jnp.arange(8.0)}
+    specs = {"b": matrixize.default_spec(grads["b"])}
+    comp = PowerSGDCompressor(rank=2)
+    state = comp.init({"b": jax.ShapeDtypeStruct((8,), jnp.float32)}, specs, key)
+    assert state["b"] is None
+    out = comp.step(grads, state, specs, key=key)
+    np.testing.assert_array_equal(np.asarray(out.agg["b"]), np.arange(8.0))
+    np.testing.assert_array_equal(np.asarray(out.recon["b"]), np.arange(8.0))
+
+
+def test_stacked_batch_dims():
+    key = jax.random.key(0)
+    m = jax.random.normal(key, (3, 4, 20, 10))  # (layers, experts, n, m)
+    grads = {"w": m}
+    specs = {"w": matrixize.MatrixSpec("matrix", 2)}
+    comp = PowerSGDCompressor(rank=2)
+    state = comp.init({"w": jax.ShapeDtypeStruct(m.shape, m.dtype)}, specs, key)
+    assert state["w"].shape == (3, 4, 10, 2)
+    out = comp.step(grads, state, specs, key=key)
+    assert out.agg["w"].shape == m.shape
+    # each (layer, expert) matrix is compressed independently to rank ≤ 2
+    s = jnp.linalg.svd(out.agg["w"], compute_uv=False)
+    assert float(s[..., 2:].max()) < 1e-4 * float(s.max())
+
+
+def test_orthogonalizer_variants_equivalent():
+    """Gram-Schmidt (paper) vs CholeskyQR (TPU opt) give the same
+    reconstruction: P̂Qᵀ only depends on span(P̂)."""
+    outs = {}
+    for orth in ("gram_schmidt", "cholesky_qr"):
+        comp, grads, state, specs, key = _setup(rank=3, orthogonalizer=orth)
+        out = comp.step(grads, state, specs, key=key)
+        outs[orth] = np.asarray(out.agg["w"])
+    np.testing.assert_allclose(outs["gram_schmidt"], outs["cholesky_qr"],
+                               atol=5e-4)
+
+
+def test_resnet18_total_compression_matches_paper():
+    """Paper Table 10: whole ResNet18 compresses 243/r× (43 MB total)."""
+    from repro.models import resnet
+
+    params, _ = resnet.init(jax.random.key(0), resnet.paper_resnet18())
+    specs = resnet.mspecs(params)
+    total = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    sent = powersgd.compressed_floats_total(
+        jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params),
+        specs, rank=1)
+    ratio = total / sent
+    assert 11.1e6 < total < 11.2e6          # 11,173,962 params ≈ 43 MB fp32
+    assert 220 < ratio < 260                 # paper: 243/1×
+
+
+def test_lstm_total_compression_matches_paper():
+    """Paper Table 11: whole LSTM compresses 310/r× (110 MB total)."""
+    from repro.models import lstm
+
+    params = lstm.init(jax.random.key(0), lstm.paper_lstm())
+    specs = lstm.mspecs(params)
+    total = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    sent = powersgd.compressed_floats_total(
+        jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params),
+        specs, rank=1)
+    ratio = total / sent
+    assert 280 < ratio < 340                 # paper: 310/1×

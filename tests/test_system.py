@@ -1,0 +1,154 @@
+"""End-to-end behaviour: the whole stack (data → model → EF-PowerSGD →
+update) actually learns, and serving actually serves."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.dist import SINGLE
+from repro.data.synthetic import MarkovLM
+from repro.launch.train import TrainHyper, make_train_step
+from repro.models import model as model_lib
+
+KEY = jax.random.key(0)
+
+
+def _train(arch, steps, compressor=None, lr=0.1, seq=64, batch=8):
+    cfg = get_config(arch, reduced=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    hyper = TrainHyper(lr=lr, q_chunk=32, warmup_steps=5, remat=False,
+                       weight_decay=0.0)
+    step_fn, _, init_state = make_train_step(cfg, mesh, hyper,
+                                             compressor=compressor)
+    # order-1 with 8 token clusters: learnable in tens of steps AND the
+    # transition table has ~8 distinct rows, so gradients are low-rank —
+    # the regime the paper targets (decaying gradient spectrum, §2)
+    data = MarkovLM(vocab=cfg.vocab_size, seed=0, order=1, clusters=8)
+    it = data.batches(batch, seq)
+    losses = []
+    with jax.set_mesh(mesh):
+        params, ef = init_state(KEY)
+        for _ in range(steps):
+            b = {k: jnp.asarray(v) for k, v in next(it).items()}
+            params, ef, met = step_fn(params, ef, b, KEY)
+            losses.append(float(met["lm_loss"]))
+    return losses, params, cfg
+
+
+def test_powersgd_training_learns():
+    losses, _, _ = _train("llama3-8b", steps=40)
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.5, (first, last)
+
+
+def test_powersgd_tracks_identity_baseline():
+    """The paper's central claim at small scale: rank-2 PowerSGD reaches
+    quality close to uncompressed SGD in the same number of steps."""
+    from repro.core.compressors import IdentityCompressor
+
+    losses_psgd, _, _ = _train("llama3-8b", steps=60)
+    losses_sgd, _, _ = _train("llama3-8b", steps=60,
+                              compressor=IdentityCompressor())
+    assert np.mean(losses_psgd[-5:]) < np.mean(losses_sgd[-5:]) + 0.5
+
+
+def test_train_then_serve_roundtrip():
+    losses, params, cfg = _train("llama3-8b", steps=10)
+    b = 2
+    cache = model_lib.init_cache(cfg, 1, b, 32)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    outs = []
+    for pos in range(8):
+        tok, logits, cache = model_lib.decode_step(
+            params, cache, tok, jnp.int32(pos), cfg, SINGLE)
+        outs.append(np.asarray(tok))
+    assert all(o.shape == (b, 1) for o in outs)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_checkpoint_resume_bitexact(tmp_path):
+    """Stop/restore mid-training: the resumed run must continue bit-exactly
+    (params, EF error, momentum, Q factors are all checkpointed)."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    cfg = get_config("yi-6b", reduced=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    hyper = TrainHyper(lr=0.1, q_chunk=32, warmup_steps=5, remat=False)
+    step_fn, _, init_state = make_train_step(cfg, mesh, hyper)
+    data = MarkovLM(vocab=cfg.vocab_size, seed=0)
+    it = data.batches(4, 32)
+    batches = [{k: jnp.asarray(v) for k, v in next(it).items()} for _ in range(6)]
+
+    with jax.set_mesh(mesh):
+        params, ef = init_state(KEY)
+        for b in batches[:3]:
+            params, ef, _ = step_fn(params, ef, b, KEY)
+        save_checkpoint(str(tmp_path), 3, {"params": params, "ef": ef})
+        for b in batches[3:]:
+            params, ef, _ = step_fn(params, ef, b, KEY)
+        final_direct = params
+
+        restored, _ = restore_checkpoint(
+            str(tmp_path), {"params": params, "ef": ef})
+        params2, ef2 = restored["params"], restored["ef"]
+        for b in batches[3:]:
+            params2, ef2, _ = step_fn(params2, ef2, b, KEY)
+
+    for a, b in zip(jax.tree_util.tree_leaves(final_direct),
+                    jax.tree_util.tree_leaves(params2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resnet_and_lstm_train():
+    """The paper's own benchmark models learn under EF-PowerSGD."""
+    from repro.core import error_feedback as ef_lib
+    from repro.core.compressors import PowerSGDCompressor
+    from repro.data.synthetic import GaussianClusters
+    from repro.models import lstm, resnet
+
+    # ResNet (scaled down) on Gaussian clusters
+    rcfg = resnet.ResNetConfig(width=8, blocks=(1, 1), num_classes=4)
+    params, bn_state = resnet.init(KEY, rcfg)
+    specs = resnet.mspecs(params)
+    comp = PowerSGDCompressor(rank=2)
+    state = ef_lib.init_state(comp, params, specs, KEY)
+    data = GaussianClusters(num_classes=4, image_size=8, noise=0.5)
+    accs = []
+
+    @jax.jit
+    def grad_fn(p, bs, batch):
+        return jax.grad(resnet.loss_fn, has_aux=True)(p, bs, batch, rcfg)
+
+    for i in range(25):
+        batch = {k: jnp.asarray(v) for k, v in data.sample(64, i).items()}
+        grads, (bn_state, met) = grad_fn(params, bn_state, batch)
+        params, state, _ = ef_lib.apply_updates(
+            comp, params, grads, state, specs, lr=0.05, momentum=0.9, key=KEY)
+        accs.append(float(met["acc"]))
+    assert np.mean(accs[-5:]) > np.mean(accs[:5]) + 0.2, accs
+
+    # LSTM LM on the (order-1) Markov stream.  tied embeddings require
+    # embed == hidden; order-1 keeps the task learnable within ~100 steps.
+    lcfg = lstm.LSTMConfig(vocab=32, embed=64, hidden=64, layers=2,
+                           init_scale=0.15)
+    lp = lstm.init(KEY, lcfg)
+    lspecs = lstm.mspecs(lp)
+    lstate = ef_lib.init_state(comp, lp, lspecs, KEY)
+    mdata = MarkovLM(vocab=32, seed=1, order=1)
+    it = mdata.batches(16, 32)
+
+    @jax.jit
+    def lgrad(p, batch):
+        return jax.grad(lstm.loss_fn, has_aux=True)(p, batch, lcfg)
+
+    losses = []
+    for i in range(100):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        grads, met = lgrad(lp, batch)
+        lp, lstate, _ = ef_lib.apply_updates(
+            comp, lp, grads, lstate, lspecs, lr=0.8, momentum=0.9, key=KEY)
+        losses.append(float(met["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses

@@ -9,7 +9,9 @@ Demonstrates, step by step:
   2. the warm-start effect (approximation error falls across steps),
   3. the linearity property (W workers ≡ 1 worker with the mean gradient),
   4. a full Error-Feedback SGD loop (Algorithm 2) on a least-squares problem,
-     converging to the same solution as uncompressed SGD.
+     converging to the same solution as uncompressed SGD,
+  5. the bucketed batched-compression engine: one step of a multi-layer
+     model issues exactly 2 data-axis collectives instead of 2 per matrix.
 """
 
 import jax
@@ -17,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import error_feedback, matrixize
 from repro.core.compressors import PowerSGDCompressor
+from repro.core.dist import CollectiveStats, MeshCtx
 from repro.core.powersgd import (PowerSGDConfig, compress_aggregate,
                                  init_state)
 
@@ -135,6 +138,37 @@ for step in range(400):
         l_ps = jnp.linalg.norm(params["w"] - w_true)
         l_sgd = jnp.linalg.norm(params_sgd - w_true)
         print(f"  step {step:3d}  |w-w*|  PowerSGD={l_ps:.4f}  SGD={l_sgd:.4f}")
+
+# ---------------------------------------------------------------------------
+section("5. Bucketed engine: 2 collectives per step, however many matrices")
+
+# a small multi-layer "model": 5 weight matrices + 5 bias vectors
+# (mirrored by tests/test_bucketing.py::test_bucketed_step_issues_exactly_two_collectives)
+mkey = jax.random.key(7)
+dims = [(64, 32), (32, 32), (32, 16), (30, 16), (16, 4)]
+mgrads, mspecs = {}, {}
+for i, (n_i, m_i) in enumerate(dims):
+    w = jax.random.normal(jax.random.fold_in(mkey, i), (n_i, m_i))
+    mgrads[f"layer{i}/w"], mspecs[f"layer{i}/w"] = w, matrixize.default_spec(w)
+    b = jax.random.normal(jax.random.fold_in(mkey, 100 + i), (m_i,))
+    mgrads[f"layer{i}/b"], mspecs[f"layer{i}/b"] = b, matrixize.default_spec(b)
+mshapes = jax.tree_util.tree_map(
+    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), mgrads)
+
+for mode in ("off", "auto"):
+    stats = CollectiveStats()
+    comp5 = PowerSGDCompressor(rank=2, bucketing=mode)
+    out5 = comp5.step(mgrads, comp5.init(mshapes, mspecs, KEY), mspecs,
+                      ctx=MeshCtx(stats=stats), key=KEY)
+    label = "per-leaf" if mode == "off" else "bucketed"
+    print(f"  {label:9s}: {stats.data_collectives:2d} collectives/step, "
+          f"bytes each: {stats.bytes_per_collective()}")
+    if mode == "off":
+        agg_ref = out5.agg
+diff5 = max(float(jnp.abs(out5.agg[k] - agg_ref[k]).max()) for k in mgrads)
+print(f"  max |bucketed - per-leaf| over the update = {diff5:.2e}")
+print("  (same math, fused into one flat all-reduce per phase — the bucketed"
+      "\n   engine is the default; pass bucketing='off' for the per-leaf path)")
 
 print("\nDone. PowerSGD tracks uncompressed SGD while sending "
       f"{(dim_in*dim_out)/(2*(dim_in+dim_out)):.0f}x fewer floats per step.")

@@ -1,0 +1,54 @@
+"""Compatibility shims for the pinned jax (0.4.x in this container).
+
+The launcher code targets the modern jax surface (``jax.shard_map``,
+``jax.set_mesh``); older releases ship the same functionality under
+different names.  Importing this module installs forward-compatible
+aliases onto ``jax`` when they are missing — a no-op on new jax:
+
+* ``jax.shard_map``  → ``jax.experimental.shard_map.shard_map`` with the
+  ``check_vma`` kwarg mapped to its old name ``check_rep``.
+* ``jax.set_mesh``   → the ``jax.sharding.Mesh`` context manager itself
+  (``with jax.set_mesh(mesh):`` ≡ ``with mesh:`` on 0.4.x).
+* ``jax.lax.axis_size`` → ``jax.core.axis_frame`` (which returns the static
+  axis size on 0.4.x), folded over tuples of axis names.
+
+Imported for its side effect by ``repro.core`` so every entry point
+(tests, examples, benchmarks, launchers) sees a uniform API.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax, "set_mesh"):
+        def set_mesh(mesh):
+            return mesh  # Mesh is a context manager on 0.4.x
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax.lax, "axis_size"):
+        from jax import core as _core
+
+        def axis_size(axis_name):
+            if isinstance(axis_name, (tuple, list)):
+                size = 1
+                for a in axis_name:
+                    size *= _core.axis_frame(a)
+                return size
+            return _core.axis_frame(axis_name)
+
+        jax.lax.axis_size = axis_size
+
+
+_install()

@@ -1,7 +1,8 @@
 """Core library: the paper's contribution (PowerSGD + EF-SGD) as composable
 JAX modules."""
 
-from repro.core.dist import MeshCtx, SINGLE
+from repro import compat  # noqa: F401  (installs jax API shims)
+from repro.core.dist import CollectiveStats, MeshCtx, SINGLE
 from repro.core.matrixize import MatrixSpec, default_spec
 from repro.core.powersgd import PowerSGDConfig, compress_aggregate, init_state
 from repro.core.compressors import (

@@ -11,6 +11,28 @@ data axes) and ``CompressOut.recon`` is the reconstruction used for the
 error-feedback update.  ``allreduce`` marks whether the scheme is linear
 (all-reduce aggregatable) — the property the paper identifies as the key to
 scalability (§3).
+
+``bits_per_worker`` accounting
+------------------------------
+``CompressOut.bits_per_worker`` is the number of bits each worker (model
+shard) contributes to gradient exchange per step — the paper's Tables
+3/10/11 metric.  Conventions, uniform across the zoo:
+
+* It counts the *payload* of the compressed representation (e.g. the r·(n+m)
+  P and Q floats for PowerSGD), not wire overhead, headers, or padding that
+  an implementation (such as the bucketed engine) may add for efficiency.
+* Uncompressed leaves (biases, norms — ``MatrixSpec.kind == "none"``) are
+  charged at full ``32 · numel`` by every compressor.
+* Index/metadata side channels are included where the scheme needs them
+  (Top-K charges 32 bits per index; Random-K / Random Block use shared
+  seeds, so indices are free; Sign+Norm charges 1 bit per coordinate plus
+  one 32-bit norm).
+* The count is per step and per worker; multiply by ``ctx.data_size()`` for
+  cluster-wide traffic (all-gather schemes) — ``benchmarks.common.comm_time``
+  models the difference between all-reduce and all-gather scaling.
+
+Actual on-the-wire bytes per collective (including bucket padding) are
+observable via :class:`repro.core.dist.CollectiveStats`.
 """
 
 from __future__ import annotations
@@ -77,6 +99,11 @@ def _budget(shape, spec, rank):
 # ---------------------------------------------------------------------------
 
 class IdentityCompressor(Compressor):
+    """Full-precision baseline.
+
+    bits_per_worker: ``32 · numel`` for every leaf (nothing is compressed).
+    """
+
     name = "identity"
     allreduce = True
 
@@ -95,15 +122,32 @@ class IdentityCompressor(Compressor):
 # ---------------------------------------------------------------------------
 
 class PowerSGDCompressor(Compressor):
+    """Rank-r PowerSGD (Alg. 1) with the bucketed batched engine by default.
+
+    ``bucketing="auto"`` (or ``"on"``) stacks same-shape-bucket matrices and
+    fuses all per-phase all-reduces into one flat collective each — 2
+    data-axis collectives per power iteration regardless of model size.
+    ``bucketing="off"`` is the per-leaf reference path (2 collectives per
+    weight matrix); the two are numerically identical up to float32
+    reassociation and share the same state layout.
+
+    bits_per_worker: ``32 · r · (n + m)`` per weight matrix (the P and Q
+    factors) plus ``32 · numel`` per uncompressed leaf.  Bucket zero-padding
+    is excluded — it is an engine artifact, not payload (see
+    ``CollectiveStats`` for wire bytes).
+    """
+
     name = "powersgd"
     allreduce = True
     stateful = True
 
     def __init__(self, rank=2, orthogonalizer="gram_schmidt", warm_start=True,
-                 num_iters=1, error_mode="global", use_pallas=False):
+                 num_iters=1, error_mode="global", use_pallas=False,
+                 bucketing="auto", bucket_pad_tolerance=0.25):
         self.cfg = powersgd.PowerSGDConfig(
             rank=rank, orthogonalizer=orthogonalizer, warm_start=warm_start,
             num_iters=num_iters, error_mode=error_mode, use_pallas=use_pallas,
+            bucketing=bucketing, bucket_pad_tolerance=bucket_pad_tolerance,
         )
         if num_iters > 1:
             self.name = f"powersgd_best_approx_{num_iters}it"
@@ -118,7 +162,11 @@ class PowerSGDCompressor(Compressor):
 
 
 class UnbiasedRankK(Compressor):
-    """§4.1: samples U with E[UUᵀ]=I and sends (MU, shared-seed U)."""
+    """§4.1: samples U with E[UUᵀ]=I and sends (MU, shared-seed U).
+
+    bits_per_worker: ``32 · n · r`` per matrix (only MU travels; U is
+    regenerated from the shared seed), plus full size for vector leaves.
+    """
 
     name = "unbiased_rank_k"
     allreduce = True
@@ -155,7 +203,9 @@ class UnbiasedRankK(Compressor):
 # ---------------------------------------------------------------------------
 
 class _FlatSparsifier(Compressor):
-    """Common scaffolding: compress each leaf as a flat vector with budget b."""
+    """Common scaffolding: compress each leaf as a flat vector with budget
+    ``b = (n+m)·r`` (rank-equivalent, paper Appendix G).  Subclasses document
+    their own bits_per_worker accounting."""
 
     def __init__(self, rank=2):
         self.rank = rank  # sets the budget b = (n+m)·r to match PowerSGD
@@ -180,7 +230,10 @@ class _FlatSparsifier(Compressor):
 
 
 class RandomBlock(_FlatSparsifier):
-    """Alg. 3: a shared-seed contiguous slice of length b.  Linear ⇒ all-reduce."""
+    """Alg. 3: a shared-seed contiguous slice of length b.  Linear ⇒ all-reduce.
+
+    bits_per_worker: ``32 · b`` (block offset is derived from the shared seed).
+    """
 
     name = "random_block"
     allreduce = True
@@ -197,7 +250,10 @@ class RandomBlock(_FlatSparsifier):
 
 
 class RandomK(_FlatSparsifier):
-    """Alg. 4: b shared-seed random coordinates.  Linear ⇒ all-reduce."""
+    """Alg. 4: b shared-seed random coordinates.  Linear ⇒ all-reduce.
+
+    bits_per_worker: ``32 · b`` (indices are free via the shared seed).
+    """
 
     name = "random_k"
     allreduce = True
@@ -213,7 +269,11 @@ class RandomK(_FlatSparsifier):
 
 
 class SignNorm(_FlatSparsifier):
-    """Alg. 5: sign(M)·‖M‖₁/nm.  Not linear ⇒ needs all-gather."""
+    """Alg. 5: sign(M)·‖M‖₁/nm.  Not linear ⇒ needs all-gather.
+
+    bits_per_worker: ``1 · numel + 32`` (one sign bit per coordinate plus the
+    32-bit norm).
+    """
 
     name = "sign_norm"
     allreduce = False
@@ -227,7 +287,11 @@ class SignNorm(_FlatSparsifier):
 
 
 class TopK(_FlatSparsifier):
-    """Alg. 6: the b largest-|.| coordinates.  Not linear ⇒ all-gather."""
+    """Alg. 6: the b largest-|.| coordinates.  Not linear ⇒ all-gather.
+
+    bits_per_worker: ``(32 + 32) · b`` — a value and an explicit index per
+    selected coordinate.
+    """
 
     name = "top_k"
     allreduce = False
@@ -250,6 +314,9 @@ class SpectralAtomo(Compressor):
     Follows the paper's modification: resample until exactly r components are
     selected (we use a fixed number of attempts with a deterministic top-r
     fallback so the whole step stays jittable).
+
+    bits_per_worker: ``32 · r · (n + m)`` per matrix (r sampled singular
+    triplets, the same budget as rank-r PowerSGD).
     """
 
     name = "spectral_atomo"
@@ -318,6 +385,12 @@ class SpectralAtomo(Compressor):
 # ---------------------------------------------------------------------------
 
 class ExactRankK(Compressor):
+    """Best rank-r approximation via SVD of the *aggregated* gradient.
+
+    bits_per_worker: ``32 · r · (n + m)`` per matrix — nominal; the oracle is
+    not actually communicable without first aggregating the dense gradient.
+    """
+
     name = "exact_rank_k"
     allreduce = False  # requires aggregating first (or gather); oracle only
 
@@ -355,6 +428,8 @@ def make_compressor(name: str, rank: int = 2, **kw) -> Compressor:
         "powersgd_cold": lambda: PowerSGDCompressor(rank=rank, warm_start=False, **kw),
         "powersgd_best_approx": lambda: PowerSGDCompressor(
             rank=rank, warm_start=False, num_iters=4, **kw),
+        "powersgd_per_leaf": lambda: PowerSGDCompressor(
+            rank=rank, bucketing="off", **kw),
         "unbiased_rank_k": lambda: UnbiasedRankK(rank=rank),
         "random_block": lambda: RandomBlock(rank=rank),
         "random_k": lambda: RandomK(rank=rank),

@@ -19,6 +19,7 @@ produce a spec tree (same structure as the param tree).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional, Tuple
 
@@ -82,6 +83,136 @@ def to_matrix(x: jax.Array, spec: MatrixSpec) -> jax.Array:
 
 def from_matrix(mat: jax.Array, shape: Tuple[int, ...], spec: MatrixSpec) -> jax.Array:
     return mat.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Shape bucketing (the batched-compression engine's planning stage)
+# ---------------------------------------------------------------------------
+#
+# The per-leaf compressor runs two tiny matmuls + two tiny collectives per
+# weight matrix.  The bucketed engine instead groups matrices of similar shape
+# into buckets, zero-pads each matrix up to its bucket's (n, m), stacks the
+# bucket into one (B, n, m) slab and runs the whole power-iteration step as
+# batched ops.  Zero padding is exact: padded rows/columns of M contribute
+# exact zeros to P = M Q and Q = Mᵀ P̂, and zero rows do not perturb
+# Gram-Schmidt / Cholesky-QR (they add nothing to any column inner product).
+#
+# Planning is pure Python over static shapes — it happens once at trace time.
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketEntry:
+    """One leaf's slot range inside a bucket's stacking dimension."""
+
+    index: int    # position of the leaf in the planner's input sequence
+    count: int    # matrices this leaf contributes (= prod(batch_shape))
+    n: int        # un-padded rows
+    m: int        # un-padded cols
+    offset: int   # first slot in the bucket's leading (stack) dim
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A (n, m)-padded stack of matrices compressed as one batched op."""
+
+    n: int
+    m: int
+    entries: Tuple[BucketEntry, ...]
+
+    @property
+    def count(self) -> int:
+        return sum(e.count for e in self.entries)
+
+    @property
+    def padded_elems(self) -> int:
+        return self.count * self.n * self.m
+
+    @property
+    def real_elems(self) -> int:
+        return sum(e.count * e.n * e.m for e in self.entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    buckets: Tuple[Bucket, ...]
+
+    @functools.cached_property
+    def _by_index(self):
+        return {e.index: (b_id, e)
+                for b_id, b in enumerate(self.buckets) for e in b.entries}
+
+    def entry_for(self, index: int) -> Tuple[int, BucketEntry]:
+        """(bucket position, entry) for the leaf at ``index``."""
+        return self._by_index[index]
+
+
+def plan_buckets(matrix_shapes, tolerance: float = 0.25) -> BucketPlan:
+    """Greedy shape bucketing with a padding-waste tolerance.
+
+    ``matrix_shapes`` is a sequence aligned with the (flattened) compressed
+    leaves: each element is ``(count, n, m)`` — ``count`` matrices of shape
+    ``(n, m)`` — or ``None`` for leaves that do not participate (uncompressed
+    vectors).  Shapes are placed largest-area first; a shape joins an existing
+    bucket iff it fits inside the bucket's (n, m) and the padded area exceeds
+    its own by at most ``tolerance`` (relative).  ``tolerance=0`` buckets only
+    exactly-equal shapes together.
+
+    The plan is deterministic: bucket order follows descending seed-shape
+    area, and entries within a bucket follow leaf order.
+    """
+    items = [(i, s[0], s[1], s[2])
+             for i, s in enumerate(matrix_shapes) if s is not None]
+    order = sorted(items, key=lambda t: (-(t[2] * t[3]), t[0]))
+    raw = []  # [n, m, [items]]
+    for it in order:
+        i, c, n, m = it
+        for b in raw:
+            bn, bm = b[0], b[1]
+            if n <= bn and m <= bm and bn * bm <= (1.0 + tolerance) * n * m:
+                b[2].append(it)
+                break
+        else:
+            raw.append([n, m, [it]])
+    buckets = []
+    for bn, bm, its in raw:
+        its.sort(key=lambda t: t[0])  # deterministic pack order: leaf order
+        entries, off = [], 0
+        for i, c, n, m in its:
+            entries.append(BucketEntry(index=i, count=c, n=n, m=m, offset=off))
+            off += c
+        buckets.append(Bucket(n=bn, m=bm, entries=tuple(entries)))
+    return BucketPlan(buckets=tuple(buckets))
+
+
+def pack_matrices(bucket: Bucket, arrays) -> jax.Array:
+    """Stack per-leaf ``(count, n, m)`` arrays into the bucket's
+    ``(B, bucket.n, bucket.m)`` slab, zero-padding rows and columns.
+    ``arrays`` is indexable by ``entry.index``."""
+    parts = []
+    for e in bucket.entries:
+        x = arrays[e.index]
+        parts.append(jnp.pad(x, ((0, 0), (0, bucket.n - e.n),
+                                 (0, bucket.m - e.m))))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def pack_factors(bucket: Bucket, arrays) -> jax.Array:
+    """Stack per-leaf ``(count, m, r)`` factor arrays into ``(B, bucket.m, r)``,
+    zero-padding the m rows (exact: padded columns of M are zero)."""
+    parts = []
+    for e in bucket.entries:
+        x = arrays[e.index]
+        parts.append(jnp.pad(x, ((0, 0), (0, bucket.m - e.m), (0, 0))))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def unpack_entry(stacked: jax.Array, entry: BucketEntry,
+                 rows: int, cols: Optional[int] = None) -> jax.Array:
+    """Slice one leaf's ``(count, rows, cols)`` block back out of a bucket
+    slab, cropping the padding.  ``cols=None`` keeps the trailing dim whole
+    (for (B, m, r) factor slabs)."""
+    x = stacked[entry.offset:entry.offset + entry.count, :rows]
+    return x if cols is None else x[:, :, :cols]
 
 
 def compressed_floats(shape: Tuple[int, ...], spec: MatrixSpec, rank: int) -> int:

@@ -9,8 +9,13 @@ Two implementations:
   sequential column loop.  Numerically adequate because r ≤ 32 here and we
   regularise the Gram matrix.
 
-Both operate on arrays of shape ``(..., n, r)`` (leading dims are batch —
-layer-stacked or expert-stacked parameters).
+Both operate on arrays of shape ``(..., n, r)`` and are *batched*: leading
+dims (layer-stacked / expert-stacked parameters, or the ``(B, n, r)`` slabs
+of the bucketed compression engine) are handled in one call — Gram-Schmidt
+runs its column loop once for the whole stack, Cholesky-QR batches the r×r
+factorizations.  Zero-padded rows (bucket padding) are exact no-ops: they
+contribute nothing to any column inner product, so the orthogonalization of
+a padded stack equals the per-matrix orthogonalization of its members.
 """
 
 from __future__ import annotations

@@ -1,7 +1,19 @@
 """Pallas TPU kernels for the PowerSGD hot loop.
 
-  * lowrank.py  — P = M Q and Q = Mᵀ P̂ tall-skinny matmuls (VMEM tiled)
+  * lowrank.py  — P = M Q and Q = Mᵀ P̂ tall-skinny matmuls (VMEM tiled).
+                  2-D inputs use a (n/bn, k/bk) grid; 3-D inputs — the
+                  bucketed engine's (B, n, m) shape-bucket slabs — add a
+                  leading batch grid dimension so one ``pallas_call``
+                  covers the whole bucket.
   * ef_apply.py — fused decompress + momentum + parameter update
-  * ops.py      — jit'd public wrappers
-  * ref.py      — pure-jnp oracles for the allclose tests
+  * ops.py      — jit'd public wrappers (`lowrank_project`,
+                  `lowrank_backproject`, `ef_apply`); rank-polymorphic over
+                  leading batch dims
+  * ref.py      — pure-jnp oracles for the allclose tests; every oracle is
+                  batched over leading dims exactly like the kernels
+
+All kernels accumulate in fp32 and are validated in interpret mode against
+``ref.py`` on CPU (the container cannot execute Mosaic); on TPU the same
+code path compiles to MXU matmuls with the rank dim padded to the 128 lane
+width.
 """

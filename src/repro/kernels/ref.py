@@ -1,4 +1,9 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
+"""Pure-jnp oracles for the Pallas kernels (the allclose reference).
+
+Every oracle is batched over arbitrary leading dims via einsum ellipsis —
+the same contract as the kernels, so a ``(B, n, k)`` bucket slab can be
+checked against the batch-grid kernel with one call.
+"""
 
 from __future__ import annotations
 
@@ -13,6 +18,11 @@ def lowrank_project(m, q):
 def lowrank_backproject(m, p_hat):
     """Q = Mᵀ P̂.  m: (..., n, k), p_hat: (..., n, r) → (..., k, r)."""
     return jnp.einsum("...nk,...nr->...kr", m, p_hat)
+
+
+def decompress(p_hat, q):
+    """Δ' = P̂ Qᵀ.  p_hat: (..., n, r), q: (..., m, r) → (..., n, m)."""
+    return jnp.einsum("...nr,...mr->...nm", p_hat, q)
 
 
 def ef_apply(x, mom, p_hat, q, lr, lam):

@@ -40,6 +40,7 @@ class TrainHyper:
     unroll: int = 1                 # scan unroll (dry-run cost accounting)
     orthogonalizer: str = "gram_schmidt"
     use_pallas: bool = False
+    bucketing: str = "auto"         # "auto"/"on" = batched engine, "off" = per-leaf
 
 
 def _schedule(hyper: TrainHyper, step):
@@ -63,7 +64,7 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
     if compressor is None:
         compressor = PowerSGDCompressor(
             rank=hyper.rank, orthogonalizer=hyper.orthogonalizer,
-            use_pallas=hyper.use_pallas)
+            use_pallas=hyper.use_pallas, bucketing=hyper.bucketing)
 
     param_ps = model.pspecs(cfg)
     mspec_tree = model.mspecs(cfg)

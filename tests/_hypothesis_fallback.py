@@ -1,0 +1,62 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The tier-1 suite uses a small slice of the hypothesis API (`@settings`,
+`@given`, `st.integers`).  This module re-implements exactly that slice with
+a seeded PRNG so the property tests still *run* (with fixed, reproducible
+examples) in minimal environments instead of failing at collection.  When
+hypothesis is available the real library is used — see the try/except import
+in the test modules.
+
+Not a shrinker, not a database, no `@example` — install hypothesis
+(`pip install -e .[test]`) for the real search.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+
+
+class _Integers:
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example(self, rng: random.Random) -> int:
+        return rng.randint(self.min_value, self.max_value)
+
+
+class strategies:  # mirrors `hypothesis.strategies` module surface
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+
+def settings(deadline=None, max_examples: int = 20, **_kw):
+    """Records max_examples on the decorated (given-wrapped) test."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Runs the test over `max_examples` deterministic draws."""
+
+    def deco(fn):
+        def wrapper():
+            rng = random.Random(0xC0FFEE)
+            for _ in range(getattr(wrapper, "_max_examples", 20)):
+                draws = {k: s.example(rng) for k, s in strats.items()}
+                fn(**draws)
+
+        # NOT functools.wraps: copying __wrapped__ would make pytest read the
+        # inner signature and demand fixtures named after the draw params.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

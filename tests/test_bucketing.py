@@ -1,0 +1,317 @@
+"""The bucketed batched-compression engine (docs/paper_map.md, design note).
+
+Covers the ISSUE acceptance criteria:
+  * bucket-planner unit tests (grouping, padding tolerance, determinism),
+  * batched-vs-per-leaf numerical equivalence on a mixed-shape tree
+    (1-D, conv, layer-stacked and non-compressible leaves),
+  * exactly 2 data-axis collectives per step regardless of matrix count,
+  * batched (B, n, m) Pallas kernels vs the ref.py oracle in interpret mode.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import matrixize
+from repro.core.compressors import PowerSGDCompressor
+from repro.core.dist import CollectiveStats, MeshCtx
+
+KEY = jax.random.key(0)
+
+
+# ---------------------------------------------------------------------------
+# bucket planner
+# ---------------------------------------------------------------------------
+
+def test_planner_groups_equal_shapes():
+    plan = matrixize.plan_buckets([(1, 64, 32), (1, 64, 32), (4, 64, 32)])
+    assert len(plan.buckets) == 1
+    b = plan.buckets[0]
+    assert (b.n, b.m) == (64, 32)
+    assert b.count == 6
+    assert [e.offset for e in b.entries] == [0, 1, 2]
+
+
+def test_planner_pads_within_tolerance():
+    # (60, 30) padded into the (64, 32) bucket: waste 2048/1800 - 1 ≈ 13.8%
+    plan = matrixize.plan_buckets([(1, 64, 32), (1, 60, 30)], tolerance=0.25)
+    assert len(plan.buckets) == 1
+    # with zero tolerance they split
+    plan0 = matrixize.plan_buckets([(1, 64, 32), (1, 60, 30)], tolerance=0.0)
+    assert len(plan0.buckets) == 2
+
+
+def test_planner_separates_distant_shapes():
+    plan = matrixize.plan_buckets([(1, 64, 32), (1, 8, 8)], tolerance=0.25)
+    assert len(plan.buckets) == 2
+
+
+def test_planner_skips_none_and_keeps_indices():
+    plan = matrixize.plan_buckets([None, (2, 16, 8), None, (1, 16, 8)])
+    assert len(plan.buckets) == 1
+    b = plan.buckets[0]
+    assert [e.index for e in b.entries] == [1, 3]
+    assert [e.offset for e in b.entries] == [0, 2]
+    b_id, e = plan.entry_for(3)
+    assert b_id == 0 and e.offset == 2 and e.count == 1
+
+
+def test_planner_never_crops():
+    # a taller-but-narrower shape must not be forced into a wider bucket
+    plan = matrixize.plan_buckets([(1, 40, 40), (1, 100, 10)], tolerance=10.0)
+    for b in plan.buckets:
+        for e in b.entries:
+            assert e.n <= b.n and e.m <= b.m
+
+
+def test_pack_unpack_roundtrip():
+    arrays = {0: jax.random.normal(KEY, (2, 10, 6)),
+              1: jax.random.normal(jax.random.fold_in(KEY, 1), (1, 8, 5))}
+    plan = matrixize.plan_buckets([(2, 10, 6), (1, 8, 5)], tolerance=1.0)
+    assert len(plan.buckets) == 1
+    b = plan.buckets[0]
+    slab = matrixize.pack_matrices(b, arrays)
+    assert slab.shape == (3, b.n, b.m)
+    for e in b.entries:
+        got = matrixize.unpack_entry(slab, e, e.n, e.m)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(arrays[e.index]))
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence on a mixed-shape tree
+# ---------------------------------------------------------------------------
+
+def _mixed_tree():
+    """Matrices in two nearby shape clusters, a conv kernel, a layer-stacked
+    leaf, and non-compressible 1-D leaves."""
+    k = KEY
+    grads = {
+        "w1": jax.random.normal(k, (64, 32)),
+        "w2": jax.random.normal(jax.random.fold_in(k, 1), (60, 30)),
+        "wide": jax.random.normal(jax.random.fold_in(k, 2), (16, 256)),
+        "conv": jax.random.normal(jax.random.fold_in(k, 3), (16, 8, 3, 3)),
+        "stack": jax.random.normal(jax.random.fold_in(k, 4), (3, 20, 10)),
+        "bias": jnp.linspace(-1.0, 1.0, 7),
+        "scale": jnp.ones((5,)),
+    }
+    specs = {
+        "w1": matrixize.default_spec(grads["w1"]),
+        "w2": matrixize.default_spec(grads["w2"]),
+        "wide": matrixize.default_spec(grads["wide"]),
+        "conv": matrixize.default_spec(grads["conv"]),
+        "stack": matrixize.MatrixSpec("matrix", 1),
+        "bias": matrixize.default_spec(grads["bias"]),
+        "scale": matrixize.default_spec(grads["scale"]),
+    }
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
+    return grads, specs, shapes
+
+
+@pytest.mark.parametrize("kw", [
+    {},
+    {"warm_start": False},
+    {"num_iters": 2},
+    {"error_mode": "local"},
+    {"orthogonalizer": "cholesky_qr"},
+    {"use_pallas": True},
+])
+def test_bucketed_matches_per_leaf(kw):
+    grads, specs, shapes = _mixed_tree()
+    a = PowerSGDCompressor(rank=2, bucketing="off", **kw)
+    b = PowerSGDCompressor(rank=2, bucketing="auto", **kw)
+    oa = a.step(grads, a.init(shapes, specs, KEY), specs, key=KEY)
+    ob = b.step(grads, b.init(shapes, specs, KEY), specs, key=KEY)
+    for name in grads:
+        np.testing.assert_allclose(np.asarray(oa.agg[name]),
+                                   np.asarray(ob.agg[name]),
+                                   atol=1e-5, err_msg=f"agg[{name}] {kw}")
+        np.testing.assert_allclose(np.asarray(oa.recon[name]),
+                                   np.asarray(ob.recon[name]),
+                                   atol=1e-5, err_msg=f"recon[{name}] {kw}")
+    for name in ("w1", "w2", "wide", "conv", "stack"):
+        np.testing.assert_allclose(np.asarray(oa.state[name]),
+                                   np.asarray(ob.state[name]),
+                                   atol=1e-5, err_msg=f"state[{name}] {kw}")
+    assert oa.state["bias"] is None and ob.state["bias"] is None
+    assert oa.bits_per_worker == ob.bits_per_worker
+
+
+def test_bucketed_warm_start_improves_over_steps():
+    grads, specs, shapes = _mixed_tree()
+    comp = PowerSGDCompressor(rank=2)
+    state = comp.init(shapes, specs, KEY)
+    errs = []
+    for _ in range(6):
+        out = comp.step(grads, state, specs, key=KEY)
+        state = out.state
+        errs.append(float(jnp.linalg.norm(grads["w1"] - out.agg["w1"])))
+    assert errs[-1] < errs[0]
+
+
+def test_bucketed_multiworker_matches_per_leaf():
+    """pmean_flat under a mapped data axis == per-leaf pmeans (linearity)."""
+    W = 4
+    grads, specs, shapes = _mixed_tree()
+    stacks = jax.tree_util.tree_map(
+        lambda g: jnp.stack([g + 0.1 * jax.random.normal(
+            jax.random.key(i), g.shape) for i in range(W)]), grads)
+    ctx = MeshCtx(data_axes=("dp",))
+    outs = {}
+    for mode in ("off", "auto"):
+        comp = PowerSGDCompressor(rank=2, bucketing=mode)
+        state = comp.init(shapes, specs, KEY)
+
+        def one(tree):
+            out = comp.step(tree, state, specs, ctx=ctx, key=KEY)
+            return out.agg
+
+        outs[mode] = jax.vmap(one, axis_name="dp")(stacks)
+    for name in grads:
+        np.testing.assert_allclose(np.asarray(outs["off"][name]),
+                                   np.asarray(outs["auto"][name]),
+                                   atol=1e-5, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# the ISSUE acceptance criterion: exactly 2 data-axis collectives per step
+# ---------------------------------------------------------------------------
+
+def _quickstart_model():
+    """Mirror of the multi-layer model in examples/quickstart.py §5."""
+    key = jax.random.key(7)
+    dims = [(64, 32), (32, 32), (32, 16), (30, 16), (16, 4)]
+    grads, specs = {}, {}
+    for i, (n, m) in enumerate(dims):
+        w = jax.random.normal(jax.random.fold_in(key, i), (n, m))
+        grads[f"layer{i}/w"] = w
+        specs[f"layer{i}/w"] = matrixize.default_spec(w)
+        b = jax.random.normal(jax.random.fold_in(key, 100 + i), (m,))
+        grads[f"layer{i}/b"] = b
+        specs[f"layer{i}/b"] = matrixize.default_spec(b)
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
+    return grads, specs, shapes
+
+
+def test_bucketed_step_issues_exactly_two_collectives():
+    grads, specs, shapes = _quickstart_model()
+    stats = CollectiveStats()
+    comp = PowerSGDCompressor(rank=2, bucketing="auto")
+    state = comp.init(shapes, specs, KEY)
+    out_b = comp.step(grads, state, specs, ctx=MeshCtx(stats=stats), key=KEY)
+    # one flat P (+ vector leaves), one flat Q — independent of matrix count
+    assert stats.data_collectives == 2, stats.sizes
+
+    per_leaf_stats = CollectiveStats()
+    per_leaf = PowerSGDCompressor(rank=2, bucketing="off")
+    out_l = per_leaf.step(grads, per_leaf.init(shapes, specs, KEY), specs,
+                          ctx=MeshCtx(stats=per_leaf_stats), key=KEY)
+    # per-leaf: 2 per weight matrix + 1 per vector leaf
+    assert per_leaf_stats.data_collectives == 2 * 5 + 5
+
+    # ...and the aggregated update matches the per-leaf path (float32)
+    for name in grads:
+        np.testing.assert_allclose(np.asarray(out_l.agg[name]),
+                                   np.asarray(out_b.agg[name]),
+                                   atol=1e-5, err_msg=name)
+
+
+def test_collective_count_independent_of_matrix_count():
+    for n_layers in (1, 3, 8):
+        key = jax.random.key(n_layers)
+        grads = {f"w{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                            (32 + i, 16))
+                 for i in range(n_layers)}
+        specs = {k: matrixize.default_spec(v) for k, v in grads.items()}
+        shapes = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
+        stats = CollectiveStats()
+        comp = PowerSGDCompressor(rank=2)
+        comp.step(grads, comp.init(shapes, specs, KEY), specs,
+                  ctx=MeshCtx(stats=stats), key=KEY)
+        assert stats.data_collectives == 2
+
+
+def test_num_iters_collective_count():
+    grads, specs, shapes = _quickstart_model()
+    stats = CollectiveStats()
+    comp = PowerSGDCompressor(rank=2, warm_start=False, num_iters=3)
+    comp.step(grads, comp.init(shapes, specs, KEY), specs,
+              ctx=MeshCtx(stats=stats), key=KEY)
+    assert stats.data_collectives == 6  # 2 per power iteration
+
+
+# ---------------------------------------------------------------------------
+# batched Pallas kernels (interpret mode) vs ref oracle
+# ---------------------------------------------------------------------------
+
+def test_batched_kernel_project_matches_ref():
+    from repro.kernels import ops, ref
+
+    for b, n, k, r in [(1, 96, 80, 2), (5, 96, 80, 2), (3, 257, 130, 4),
+                       (2, 33, 500, 1)]:
+        m = jax.random.normal(jax.random.fold_in(KEY, b * n), (b, n, k))
+        q = jax.random.normal(jax.random.fold_in(KEY, b * n + 1), (b, k, r))
+        got = ops.lowrank_project(m, q, block_n=64, block_k=64)
+        want = ref.lowrank_project(m, q)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_batched_kernel_backproject_matches_ref():
+    from repro.kernels import ops, ref
+
+    for b, n, k, r in [(1, 96, 80, 2), (5, 96, 80, 2), (3, 257, 130, 4),
+                       (2, 33, 500, 1)]:
+        m = jax.random.normal(jax.random.fold_in(KEY, b * k), (b, n, k))
+        p = jax.random.normal(jax.random.fold_in(KEY, b * k + 1), (b, n, r))
+        got = ops.lowrank_backproject(m, p, block_n=64, block_k=64)
+        want = ref.lowrank_backproject(m, p)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_batched_kernel_higher_rank_batch_dims():
+    from repro.kernels import ops, ref
+
+    m = jax.random.normal(KEY, (2, 3, 40, 24))
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 3, 24, 2))
+    got = ops.lowrank_project(m, q, block_n=32, block_k=32)
+    want = ref.lowrank_project(m, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pmean_flat unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_pmean_flat_identity_roundtrip():
+    parts = [jax.random.normal(KEY, (3, 4)),
+             jnp.arange(5.0),
+             jax.random.normal(jax.random.fold_in(KEY, 1), (2, 2, 2))]
+    stats = CollectiveStats()
+    out = MeshCtx(stats=stats).pmean_flat(parts)
+    assert stats.data_collectives == 1
+    assert stats.sizes == [12 + 5 + 8]
+    for a, b in zip(parts, out):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert MeshCtx().pmean_flat([]) == []
+
+
+def test_pmean_flat_means_over_mapped_axis():
+    W = 4
+    xs = jnp.stack([jnp.full((3,), float(i)) for i in range(W)])
+    ys = jnp.stack([jnp.full((2, 2), float(10 * i)) for i in range(W)])
+    ctx = MeshCtx(data_axes=("dp",))
+
+    def one(x, y):
+        a, b = ctx.pmean_flat([x, y])
+        return a, b
+
+    a, b = jax.vmap(one, axis_name="dp")(xs, ys)
+    np.testing.assert_allclose(np.asarray(a[0]), np.full((3,), 1.5))
+    np.testing.assert_allclose(np.asarray(b[0]), np.full((2, 2), 15.0))

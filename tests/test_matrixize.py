@@ -1,7 +1,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import matrixize
 from repro.core.matrixize import MatrixSpec

@@ -2,7 +2,16 @@
 JAX modules."""
 
 from repro import compat  # noqa: F401  (installs jax API shims)
-from repro.core.dist import CollectiveStats, MeshCtx, SINGLE
+from repro.core.dist import (
+    AXIS,
+    AxisBackend,
+    CollectiveBackend,
+    CollectiveStats,
+    MeshCtx,
+    SimBackend,
+    SINGLE,
+)
+from repro.core.simmesh import SimMesh
 from repro.core.matrixize import MatrixSpec, default_spec
 from repro.core.powersgd import PowerSGDConfig, compress_aggregate, init_state
 from repro.core.compressors import (

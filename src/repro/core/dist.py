@@ -5,6 +5,28 @@ hard-coding ``lax.psum(..., axis_name=...)`` calls.  Outside of a
 ``shard_map`` (single-device smoke tests, benchmarks) the context has no axis
 names and every collective degenerates to the identity, so the *same* code
 path runs on one CPU device and on a 512-chip mesh.
+
+Collective dispatch
+-------------------
+``MeshCtx`` does not issue ``lax`` collectives directly; every collective
+goes through a :class:`CollectiveBackend`.  Two backends exist:
+
+* :data:`AXIS` (:class:`AxisBackend`) — the production backend: delegates to
+  the ``lax`` named-axis collectives, which resolve against the enclosing
+  ``shard_map`` (or ``vmap``) axis environment.  This is the default and is
+  behaviourally identical to the pre-backend code.
+* :class:`SimBackend` — the in-process W-worker simulation backend used by
+  :class:`repro.core.simmesh.SimMesh`.  The worker axis is a ``jax.vmap``
+  axis carried as a stacked leading dimension through the whole step, so
+  collectives lower to *exact* sums/means over that stacked axis on a single
+  device — no XLA collectives, bit-deterministic, and byte-for-byte the same
+  compressor code path as production.  It additionally supports per-worker
+  *weights* (heterogeneous batch sizes, worker dropout, stragglers): with a
+  weight ``w_i`` attached, ``pmean`` becomes ``Σ w_i x_i / Σ w_i`` and
+  ``psum`` becomes ``Σ w_i x_i``.
+
+``CollectiveStats`` recording and ``pmean_flat`` fusion live in ``MeshCtx``
+itself and therefore work unchanged under either backend.
 """
 
 from __future__ import annotations
@@ -52,6 +74,126 @@ class CollectiveStats:
         return [s * i for s, i in zip(self.sizes, self.itemsizes)]
 
 
+# ---------------------------------------------------------------------------
+# collective backends
+# ---------------------------------------------------------------------------
+
+class CollectiveBackend:
+    """The primitive collectives :class:`MeshCtx` dispatches through.
+
+    ``axes`` arguments are tuples of axis names (or a single name for the
+    single-axis collectives) that are guaranteed non-empty by the caller —
+    ``MeshCtx`` short-circuits empty axis sets to the identity before
+    dispatching.
+    """
+
+    def psum(self, x, axes):
+        raise NotImplementedError
+
+    def pmean(self, x, axes):
+        raise NotImplementedError
+
+    def pmax(self, x, axes):
+        raise NotImplementedError
+
+    def all_gather(self, x, axis, *, gather_axis: int, tiled: bool):
+        raise NotImplementedError
+
+    def ppermute(self, x, axis, perm):
+        raise NotImplementedError
+
+    def all_to_all(self, x, axis, *, split_axis: int, concat_axis: int):
+        raise NotImplementedError
+
+    def axis_size(self, axes) -> int:
+        raise NotImplementedError
+
+    def axis_index(self, axis):
+        raise NotImplementedError
+
+
+class AxisBackend(CollectiveBackend):
+    """Named-axis collectives against the enclosing shard_map/vmap env."""
+
+    def psum(self, x, axes):
+        return lax.psum(x, axes)
+
+    def pmean(self, x, axes):
+        return lax.pmean(x, axes)
+
+    def pmax(self, x, axes):
+        return lax.pmax(x, axes)
+
+    def all_gather(self, x, axis, *, gather_axis: int, tiled: bool):
+        return lax.all_gather(x, axis, axis=gather_axis, tiled=tiled)
+
+    def ppermute(self, x, axis, perm):
+        return lax.ppermute(x, axis, perm)
+
+    def all_to_all(self, x, axis, *, split_axis: int, concat_axis: int):
+        return lax.all_to_all(x, axis, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+    def axis_size(self, axes) -> int:
+        n = 1
+        for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+            n *= lax.axis_size(a)
+        return n
+
+    def axis_index(self, axis):
+        return lax.axis_index(axis)
+
+
+AXIS = AxisBackend()  # stateless — one shared instance
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SimBackend(AxisBackend):
+    """W-logical-worker simulation backend (see :mod:`repro.core.simmesh`).
+
+    Must run inside ``jax.vmap(..., axis_name=self.axis)`` over the stacked
+    worker dimension; the named-axis collectives then lower to exact
+    reductions over that stacked axis on one device.
+
+    ``weight`` (optional) is this worker's scalar contribution weight — a
+    traced value under ``vmap``, one scalar per worker.  It models
+    heterogeneous per-worker batch sizes (weight ∝ local token count),
+    worker dropout and straggler-skipped rounds (weight 0 for the affected
+    round).  Weighted ``pmean`` is ``Σ w_i x_i / Σ w_i``; if every worker is
+    dropped the aggregate degenerates to exactly zero (the denominator is
+    guarded), i.e. the round becomes a no-op on the aggregated update.
+    Weights apply to ``psum``/``pmean`` only — in simulation the context has
+    no model/seq axes, so those are the data-parallel collectives.
+    """
+
+    axis: str
+    size: int
+    weight: Optional[jax.Array] = None
+
+    def psum(self, x, axes):
+        if self.weight is not None:
+            x = x * self.weight.astype(x.dtype)
+        return lax.psum(x, axes)
+
+    def pmean(self, x, axes):
+        if self.weight is None:
+            return lax.pmean(x, axes)
+        w = self.weight
+        total = lax.psum(w, axes)
+        numer = lax.psum(x * w.astype(x.dtype), axes)
+        # divide in the weight dtype (f32): finfo.tiny would underflow to 0
+        # if cast to a low-precision wire dtype, turning the all-dropped
+        # round into 0/0 = NaN instead of the documented exact zero
+        denom = jnp.maximum(total, jnp.finfo(total.dtype).tiny)
+        return (numer.astype(total.dtype) / denom).astype(x.dtype)
+
+    def axis_size(self, axes) -> int:
+        n = 1
+        for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+            n *= self.size if a == self.axis else lax.axis_size(a)
+        return n
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshCtx:
     """Names of the mesh axes the current computation is mapped over.
@@ -65,6 +207,11 @@ class MeshCtx:
     stats:      optional :class:`CollectiveStats` that records every data-axis
                 collective issued through this context (excluded from eq/hash;
                 purely observational).
+    backend:    :class:`CollectiveBackend` the collectives dispatch through —
+                :data:`AXIS` (production shard_map) by default, or a
+                :class:`SimBackend` inside a :class:`~repro.core.simmesh.
+                SimMesh` step (excluded from eq/hash: a ``SimBackend`` may
+                hold traced per-worker weights).
     """
 
     data_axes: Tuple[str, ...] = ()
@@ -72,6 +219,8 @@ class MeshCtx:
     seq_axes: Tuple[str, ...] = ()
     stats: Optional[CollectiveStats] = dataclasses.field(
         default=None, compare=False)
+    backend: CollectiveBackend = dataclasses.field(
+        default=AXIS, compare=False)
 
     def _record_data(self, x) -> None:
         if self.stats is not None:
@@ -80,11 +229,11 @@ class MeshCtx:
     # -- data-parallel collectives (gradient aggregation) ------------------
     def psum_data(self, x):
         self._record_data(x)
-        return lax.psum(x, self.data_axes) if self.data_axes else x
+        return self.backend.psum(x, self.data_axes) if self.data_axes else x
 
     def pmean_data(self, x):
         self._record_data(x)
-        return lax.pmean(x, self.data_axes) if self.data_axes else x
+        return self.backend.pmean(x, self.data_axes) if self.data_axes else x
 
     def pmean_flat(self, parts: Sequence[jax.Array]) -> List[jax.Array]:
         """Fused all-reduce-mean: ONE collective for a whole list of arrays.
@@ -105,7 +254,7 @@ class MeshCtx:
         buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
         self._record_data(buf)
         if self.data_axes:
-            buf = lax.pmean(buf, self.data_axes)
+            buf = self.backend.pmean(buf, self.data_axes)
         out, off = [], 0
         for p in parts:
             out.append(
@@ -116,59 +265,55 @@ class MeshCtx:
 
     # -- model-parallel collectives (tensor parallelism) --------------------
     def psum_model(self, x):
-        return lax.psum(x, self.model_axis) if self.model_axis else x
+        return self.backend.psum(x, self.model_axis) if self.model_axis else x
 
     def pmean_model(self, x):
-        return lax.pmean(x, self.model_axis) if self.model_axis else x
+        return self.backend.pmean(x, self.model_axis) if self.model_axis else x
 
     def pmax_model(self, x):
-        return lax.pmax(x, self.model_axis) if self.model_axis else x
+        return self.backend.pmax(x, self.model_axis) if self.model_axis else x
 
     def all_gather_model(self, x, axis: int = -1, tiled: bool = True):
         if self.model_axis is None:
             return x
-        return lax.all_gather(x, self.model_axis, axis=axis, tiled=tiled)
+        return self.backend.all_gather(x, self.model_axis, gather_axis=axis,
+                                       tiled=tiled)
 
     def ppermute_model(self, x, perm):
         if self.model_axis is None:
             return x
-        return lax.ppermute(x, self.model_axis, perm)
+        return self.backend.ppermute(x, self.model_axis, perm)
 
     def all_to_all_model(self, x, split_axis: int, concat_axis: int):
         """Re-distribute: split ``split_axis`` over the model axis, gather
         ``concat_axis`` (e.g. column-sharded → row-sharded activations)."""
         if self.model_axis is None:
             return x
-        return lax.all_to_all(x, self.model_axis, split_axis=split_axis,
-                              concat_axis=concat_axis, tiled=True)
+        return self.backend.all_to_all(x, self.model_axis,
+                                       split_axis=split_axis,
+                                       concat_axis=concat_axis)
 
     # -- sequence-shard collectives (flash-decode merge) ---------------------
     def psum_seq(self, x):
-        return lax.psum(x, self.seq_axes) if self.seq_axes else x
+        return self.backend.psum(x, self.seq_axes) if self.seq_axes else x
 
     def pmax_seq(self, x):
-        return lax.pmax(x, self.seq_axes) if self.seq_axes else x
+        return self.backend.pmax(x, self.seq_axes) if self.seq_axes else x
 
     # -- sizes / indices ----------------------------------------------------
     def data_size(self) -> int:
-        n = 1
-        for a in self.data_axes:
-            n *= lax.axis_size(a)
-        return n
+        return self.backend.axis_size(self.data_axes) if self.data_axes else 1
 
     def model_size(self) -> int:
-        return lax.axis_size(self.model_axis) if self.model_axis else 1
+        return self.backend.axis_size(self.model_axis) if self.model_axis else 1
 
     def seq_size(self) -> int:
-        n = 1
-        for a in self.seq_axes:
-            n *= lax.axis_size(a)
-        return n
+        return self.backend.axis_size(self.seq_axes) if self.seq_axes else 1
 
     def model_index(self):
         if self.model_axis is None:
             return 0
-        return lax.axis_index(self.model_axis)
+        return self.backend.axis_index(self.model_axis)
 
     def seq_index(self):
         """Linearised index over the seq axes (row-major)."""
@@ -176,7 +321,7 @@ class MeshCtx:
             return 0
         idx = 0
         for a in self.seq_axes:
-            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+            idx = idx * self.backend.axis_size((a,)) + self.backend.axis_index(a)
         return idx
 
     def data_index(self):
@@ -185,7 +330,7 @@ class MeshCtx:
             return 0
         idx = 0
         for a in self.data_axes:
-            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+            idx = idx * self.backend.axis_size((a,)) + self.backend.axis_index(a)
         return idx
 
 

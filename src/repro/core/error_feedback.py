@@ -10,7 +10,15 @@
 The error buffer ``e_w`` is per-worker state: in the distributed train step it
 is carried with a leading data-parallel dim sharded over the data axes, so
 each rank owns a distinct buffer.  This module itself is shape-agnostic — it
-operates on whatever (local) tree it is given.
+operates on whatever (local) tree it is given.  Under the in-process
+W-worker simulator (:mod:`repro.core.simmesh`, ``make_sim_train_step``) the
+same code runs per logical worker under ``vmap``: ``e_w`` carries a stacked
+leading worker dim and the compressor's collectives become exact means over
+it.  A worker dropped from a round (scenario weight 0) still updates its
+error from its own ``Δ_w`` as usual (against the round's reconstruction:
+the worker's own back-projection under ``error_mode="local"``, the
+aggregated one under the default ``"global"``) — Algorithm 2's per-worker
+state is local by construction, only the aggregation is weighted.
 
 Weight decay follows the paper's recipe (§5): coupled, added to the gradient
 *before* compression, and disabled for uncompressed (norm/bias) parameters.

@@ -51,9 +51,17 @@ def gram_schmidt(p: jax.Array, eps: float = _EPS) -> jax.Array:
 def _cholesky_qr_once(p: jax.Array, eps: float) -> jax.Array:
     r = p.shape[-1]
     gram = jnp.einsum("...nr,...ns->...rs", p, p)
-    # scale-aware jitter keeps the factorisation safe for tiny gradients
+    # Scale-aware jitter keeps the factorisation safe for tiny gradients AND
+    # for near-rank-deficient P (warm-started P collapses toward the top
+    # singular directions whenever the gradient rank is below r, so this is
+    # the common converged case, not a corner).  The shift must dominate the
+    # dtype's rounding noise in the Gram entries — O(ulp·‖G‖) — or the
+    # factorisation goes NaN on numerically indefinite inputs; directions the
+    # shift swamps come back orthonormal through the second pass (CholeskyQR2)
+    # or stay harmlessly near zero when truly dependent.
     scale = jnp.trace(gram, axis1=-2, axis2=-1)[..., None, None] / r
-    gram = gram + (eps + eps * scale) * jnp.eye(r, dtype=p.dtype)
+    ulp = jnp.finfo(p.dtype).eps
+    gram = gram + (eps + 64.0 * ulp * scale) * jnp.eye(r, dtype=p.dtype)
     chol = jnp.linalg.cholesky(gram)
     # solve P̂ Lᵀ = P  ⇒  P̂ = P L⁻ᵀ
     return lax.linalg.triangular_solve(

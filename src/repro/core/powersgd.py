@@ -18,6 +18,13 @@ Under tensor parallelism each model shard compresses its local slice of every
 weight matrix independently and all-reduces only over the data axes; the
 paper's W-worker linearity argument applies verbatim per shard.
 
+All aggregation goes through ``ctx`` (:class:`repro.core.dist.MeshCtx`), so
+the same compressor code runs on a real mesh (shard_map axes) and on the
+in-process W-worker simulator (:mod:`repro.core.simmesh`), where the
+``pmean``s become exact — optionally *weighted* — means over a stacked
+worker axis; ``tests/sim/`` replays Lemma 3 and the collective-count
+invariant on that substrate.
+
 Bucketed batched-compression engine (default, ``bucketing="auto"``)
 -------------------------------------------------------------------
 The per-leaf schedule above issues two collectives *per weight matrix* —

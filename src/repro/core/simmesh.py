@@ -1,0 +1,122 @@
+"""SimMesh — deterministic in-process W-worker simulation substrate.
+
+The paper's core claims (Algorithm 2's per-worker error feedback, Appendix
+A.3 linearity, all-reduce aggregation of the compressed factors) are
+W-worker properties.  Exercising them through real multi-device meshes needs
+subprocesses with faked XLA device counts — minutes per scenario, and shapes
+like "worker 3 dropped this round" or "worker 0 has a bigger batch" are not
+expressible at all.  ``SimMesh`` instead runs W *logical* workers in one
+process on one device:
+
+* every per-worker value (params copy, gradients, EF error buffer, batch
+  shard) carries a stacked leading worker dimension of size W,
+* the whole train step runs under ``jax.vmap(..., axis_name=self.axis)``
+  over that dimension (:meth:`SimMesh.run`),
+* ``MeshCtx`` collectives dispatch through a :class:`~repro.core.dist.
+  SimBackend`, so ``pmean_data`` / ``pmean_flat`` lower to exact means/sums
+  over the stacked axis — the same compressor code path as production,
+  bit-deterministic on a single CPU device, with ``CollectiveStats``
+  counting unchanged.
+
+Scenario injection: :meth:`SimMesh.ctx` accepts a per-worker scalar
+``weight`` (a traced value inside the step).  Weights model heterogeneous
+per-worker batch sizes (weight ∝ local token count), worker dropout and
+straggler-skipped rounds (weight 0 for the affected worker/round); see
+:class:`repro.core.dist.SimBackend` for the exact semantics.
+
+The conformance suite under ``tests/sim/`` replays the paper's W-worker
+invariants on this substrate in seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dist import CollectiveStats, MeshCtx, SimBackend
+
+
+@dataclasses.dataclass(frozen=True)
+class SimMesh:
+    """W logical data-parallel workers simulated in one process.
+
+    ``axis`` is the vmap axis name the worker dimension is mapped under; it
+    plays the role of the production mesh's ``data`` axis, so a ``SimMesh``
+    context has ``data_axes=(axis,)`` and no model/seq axes (tensor
+    parallelism is orthogonal to what the simulator isolates: the paper's
+    linearity argument applies per model shard).
+    """
+
+    workers: int
+    axis: str = "simworker"
+
+    def __post_init__(self):
+        assert self.workers >= 1, self.workers
+
+    # -- contexts -----------------------------------------------------------
+    def ctx(self, weight: Optional[jax.Array] = None,
+            stats: Optional[CollectiveStats] = None) -> MeshCtx:
+        """A :class:`MeshCtx` for code running inside :meth:`run`.
+
+        ``weight`` — this worker's scalar contribution weight (traced, one
+        per worker under the vmap); ``None`` = uniform (plain means).
+        Construct the context *inside* the mapped function so a traced
+        weight binds to the right trace.
+        """
+        return MeshCtx(
+            data_axes=(self.axis,),
+            stats=stats,
+            backend=SimBackend(axis=self.axis, size=self.workers,
+                               weight=weight),
+        )
+
+    # -- execution ----------------------------------------------------------
+    def run(self, fn, in_axes=0, out_axes=0):
+        """``jax.vmap`` over the stacked worker dimension with this mesh's
+        axis name.  ``in_axes=None`` marks arguments shared by all workers
+        (e.g. the PRNG key — compressors rely on shared seeds)."""
+        return jax.vmap(fn, in_axes=in_axes, out_axes=out_axes,
+                        axis_name=self.axis)
+
+    # -- data movement ------------------------------------------------------
+    def replicate(self, tree):
+        """Stack W identical copies of every leaf: shape → (W,) + shape."""
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                jnp.asarray(x)[None],
+                (self.workers,) + jnp.asarray(x).shape),
+            tree)
+
+    def unreplicate(self, tree):
+        """Take worker 0's copy of every leaf (inverse of replicate for
+        values that are identical across workers, e.g. post-all-reduce)."""
+        return jax.tree_util.tree_map(lambda x: x[0], tree)
+
+    def shard(self, tree):
+        """Split every leaf's leading (global batch) dim W ways:
+        (W·b, ...) → (W, b, ...).  The W-worker analogue of
+        :func:`repro.data.synthetic.shard_batch`."""
+
+        def leaf(x):
+            x = jnp.asarray(x)
+            n = x.shape[0]
+            assert n % self.workers == 0, (n, self.workers)
+            return x.reshape((self.workers, n // self.workers) + x.shape[1:])
+
+        return jax.tree_util.tree_map(leaf, tree)
+
+    def assert_replicated(self, tree, what: str = "tree"):
+        """Host-side check that every leaf is bit-identical across workers —
+        the sync invariant of data-parallel SGD (params after an all-reduced
+        update must agree on every worker)."""
+        import numpy as np
+
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            a = np.asarray(leaf)
+            if not (a == a[:1]).all():
+                raise AssertionError(
+                    f"{what}{jax.tree_util.keystr(path)} diverges across "
+                    f"workers (max |Δ| = {np.abs(a - a[:1]).max()})")

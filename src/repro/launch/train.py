@@ -158,6 +158,94 @@ def _ef_in_specs(ef_ps: EFState):
 
 
 # ---------------------------------------------------------------------------
+# SimMesh training step: W logical workers in one process (one device)
+# ---------------------------------------------------------------------------
+
+def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
+                        compressor: Optional[Compressor] = None,
+                        stats=None):
+    """W-worker EF-PowerSGD train step on a :class:`repro.core.simmesh.
+    SimMesh` — same math as the ``shard_map`` step, no mesh required.
+
+    Returns ``(step_fn, init_state)``:
+
+    ``step_fn(params, ef_state, batch, key, weights=None)`` →
+    ``(params, ef_state, metrics)`` where every tree carries a stacked
+    leading worker dim of size ``sim.workers`` (``batch`` is per-worker
+    shards ``(W, b_local, ...)``, see :meth:`SimMesh.shard`) and ``key`` is
+    shared by all workers (compressors rely on shared seeds).  ``weights``
+    is an optional ``(W,)`` per-worker contribution-weight vector for
+    scenario injection — uniform means when omitted; ``0`` drops a worker
+    from this round's aggregation (its per-worker EF memory still updates
+    from its own ``Δ_w``, against the round's reconstruction per
+    ``error_mode``); for heterogeneous batch sizes pass each worker's
+    valid-token count.
+
+    ``init_state(key)`` → ``(params, ef_state)``, replicated/zeroed with the
+    worker dim attached.  Workers start bit-identical and — because every
+    update is a function of all-reduced quantities only — must *stay*
+    bit-identical (``sim.assert_replicated`` checks this invariant).
+    """
+    if compressor is None:
+        compressor = PowerSGDCompressor(
+            rank=hyper.rank, orthogonalizer=hyper.orthogonalizer,
+            use_pallas=hyper.use_pallas, bucketing=hyper.bucketing)
+    mspec_tree = model.mspecs(cfg)
+
+    def worker_step(params, ef_state, batch, key, weight):
+        # ctx is built inside the mapped function so the traced per-worker
+        # weight binds to this trace
+        ctx = sim.ctx(weight=weight, stats=stats)
+
+        def loss_fn(p):
+            return model.loss_fn(p, batch, cfg, ctx, window=hyper.window,
+                                 q_chunk=hyper.q_chunk, remat=hyper.remat,
+                                 unroll=hyper.unroll)
+
+        grads, metrics = jax.grad(loss_fn, has_aux=True)(params)
+
+        lr = _schedule(hyper, ef_state.step)
+        new_params, new_state, aux = error_feedback.apply_updates(
+            compressor, params, grads, ef_state, mspec_tree,
+            lr=lr, momentum=hyper.momentum, weight_decay=hyper.weight_decay,
+            ctx=ctx, key=key, use_pallas_apply=hyper.use_pallas)
+
+        # metrics aggregate through the backend directly: they are
+        # observability, not gradient traffic, and must not perturb the
+        # CollectiveStats 2-collectives-per-step invariant
+        metrics = {k: ctx.backend.pmean(v, ctx.data_axes)
+                   for k, v in metrics.items()}
+        metrics["lr"] = lr
+        return new_params, new_state, metrics
+
+    mapped = sim.run(worker_step, in_axes=(0, 0, 0, None, 0))
+    jitted = jax.jit(mapped, donate_argnums=(0, 1))
+
+    def step_fn(params, ef_state, batch, key, weights=None):
+        if weights is None:
+            weights = jnp.ones((sim.workers,), jnp.float32)
+        return jitted(params, ef_state, batch, key,
+                      jnp.asarray(weights, jnp.float32))
+
+    def init_state(key):
+        kp, kc = jax.random.split(key)
+        params = model.init(kp, cfg, model_shards=1)
+        comp = compressor.init(
+            jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params),
+            mspec_tree, kc)
+        ef = EFState(
+            error=jax.tree_util.tree_map(jnp.zeros_like, params),
+            momentum=jax.tree_util.tree_map(jnp.zeros_like, params),
+            comp=comp,
+            step=jnp.zeros((), jnp.int32),
+        )
+        return sim.replicate(params), sim.replicate(ef)
+
+    return step_fn, init_state
+
+
+# ---------------------------------------------------------------------------
 # CLI driver: end-to-end training of a reduced model on host devices
 # ---------------------------------------------------------------------------
 

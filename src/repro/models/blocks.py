@@ -164,7 +164,7 @@ def decode(params, caches, x, pos, cfg: ModelConfig, ctx: MeshCtx, *,
             if slot.ffn != "none":
                 z = common.rmsnorm(h, sp["norm2"])
                 if slot.ffn == "moe":
-                    y, _ = moe.forward(sp["ffn"], z, cfg, ctx)
+                    y, _ = moe.forward(sp["ffn"], z, cfg, ctx, dropless=True)
                     h = h + y
                 else:
                     h = h + mlp.forward(sp["ffn"], z, cfg, ctx)
@@ -201,7 +201,7 @@ def prefill(params, x, cfg: ModelConfig, ctx: MeshCtx, *, window: int = 0,
             if slot.ffn != "none":
                 z = common.rmsnorm(h, sp["norm2"])
                 if slot.ffn == "moe":
-                    y, _ = moe.forward(sp["ffn"], z, cfg, ctx)
+                    y, _ = moe.forward(sp["ffn"], z, cfg, ctx, dropless=True)
                     h = h + y
                 else:
                     h = h + mlp.forward(sp["ffn"], z, cfg, ctx)

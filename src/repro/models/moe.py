@@ -63,14 +63,28 @@ def capacity(cfg: ModelConfig, tokens: int) -> int:
     return max(8, min(c, tokens))
 
 
-def forward(params, x, cfg: ModelConfig, ctx: MeshCtx):
-    """x: (B, S, d) replicated over the model axis.  Returns (out, aux_loss)."""
+def forward(params, x, cfg: ModelConfig, ctx: MeshCtx, *, dropless: bool = False):
+    """x: (B, S, d) replicated over the model axis.  Returns (out, aux_loss).
+
+    ``dropless=True`` sizes every expert's buffer to the full token count so
+    no (token, expert) assignment is ever dropped.  Training uses the
+    capacity-factor scheme (drops are part of the optimization dynamics);
+    inference (prefill/decode) must be dropless — decode routes one token at
+    a time and never hits capacity, so a prefill that drops tokens would
+    disagree with token-by-token decode on the same prompt.
+    """
     b, s, d = x.shape
     t = b * s
     e = cfg.moe_num_experts
     k = cfg.moe_top_k
     e_local = params["w_gate"].shape[0]
-    cap = capacity(cfg, t)
+    # A token's top-k experts are distinct, so one expert sees ≤ t entries;
+    # cap = t keeps the dense per-expert block layout (the einsums below need
+    # contiguous expert blocks) at the cost of an (e_local·t, d) dispatch
+    # buffer of which ≤ t·k rows are occupied.  Fine for the serve shapes we
+    # run; a ragged/sorted dispatch would tighten memory for long-prompt
+    # many-expert prefill.
+    cap = t if dropless else capacity(cfg, t)
 
     xt = x.reshape(t, d)
     logits = (xt @ params["router"]).astype(jnp.float32)      # (T, E)

@@ -1,5 +1,9 @@
 import os
+import signal
 import sys
+import threading
+
+import pytest
 
 # make `import repro` work regardless of how pytest is invoked
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -9,3 +13,56 @@ if SRC not in sys.path:
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # single real CPU device.  Multi-device tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves.
+
+
+# ---------------------------------------------------------------------------
+# per-test timeout (no pytest-timeout dependency — the container is minimal)
+# ---------------------------------------------------------------------------
+#
+# Default comes from the `test_timeout` ini option (pyproject.toml); override
+# per test with `@pytest.mark.timeout(seconds)`.  0 disables.  Implemented
+# with SIGALRM (main thread, POSIX only).  Scope caveat: a Python signal
+# handler runs between bytecodes, so this interrupts Python-level hangs
+# (stuck loops, subprocess waits, step-by-step jax dispatch) but NOT a call
+# blocked inside C++ that never returns to the interpreter — those still
+# need the CI job-level timeout as the backstop.
+
+def pytest_addoption(parser):
+    parser.addini("test_timeout",
+                  "per-test timeout in seconds (0 disables)", default="300")
+
+
+class _TestTimeout(Exception):
+    pass
+
+
+def _timeout_for(item) -> int:
+    marker = item.get_closest_marker("timeout")
+    if marker is not None and marker.args:
+        return int(marker.args[0])
+    return int(item.config.getini("test_timeout"))
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_protocol(item, nextitem):
+    # wrap the whole protocol (setup + call + teardown): module-scoped
+    # fixtures do the suite's heaviest work (jit compiles, sim training),
+    # and a hang there must trip the alarm just like one in the test body
+    seconds = _timeout_for(item)
+    if (seconds <= 0 or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+
+    def on_alarm(signum, frame):
+        raise _TestTimeout(
+            f"{item.nodeid} exceeded the per-test timeout of {seconds}s "
+            f"(test_timeout ini / @pytest.mark.timeout)")
+
+    previous = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, previous)

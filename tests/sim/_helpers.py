@@ -1,0 +1,65 @@
+"""Shared helpers for the SimMesh conformance suite.
+
+Everything here runs W logical workers in-process on the single CPU device —
+see ``src/repro/core/simmesh.py`` for the substrate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.simmesh import SimMesh
+from repro.data.synthetic import MarkovLM
+from repro.launch.train import TrainHyper, make_sim_train_step
+
+KEY = jax.random.key(0)
+
+
+def sim_train(arch="llama3-8b", workers=1, steps=3, batch=8, seq=32,
+              weights_for_step=None, stats=None, hyper=None, data=None,
+              compressor=None, shard_fn=None):
+    """Run ``steps`` of the W-worker EF-PowerSGD sim train step.
+
+    ``weights_for_step(step) -> (W,) array or None`` injects per-round
+    scenario weights (dropout / heterogeneous batches / stragglers).
+    ``shard_fn(batch) -> stacked batch`` overrides the default even split
+    (``sim.shard``), e.g. to stack heterogeneous per-worker shards.
+    Returns ``(losses, params_w0, sim, (params, ef))`` — ``losses`` is the
+    per-step worker-aggregated lm_loss, ``params_w0`` is worker 0's final
+    params as numpy.
+    """
+    cfg = get_config(arch, reduced=True)
+    if hyper is None:
+        hyper = TrainHyper(q_chunk=32, warmup_steps=5, remat=False,
+                           weight_decay=0.0)
+    sim = SimMesh(workers)
+    step_fn, init_state = make_sim_train_step(cfg, sim, hyper,
+                                              compressor=compressor,
+                                              stats=stats)
+    if data is None:
+        data = MarkovLM(vocab=cfg.vocab_size, seed=0)
+    if shard_fn is None:
+        shard_fn = sim.shard
+    it = data.batches(batch, seq)
+    params, ef = init_state(KEY)
+    losses = []
+    for i in range(steps):
+        b = shard_fn({k: jnp.asarray(v) for k, v in next(it).items()})
+        w = weights_for_step(i) if weights_for_step is not None else None
+        params, ef, met = step_fn(params, ef, b, KEY, w)
+        losses.append(float(met["lm_loss"][0]))
+    params_w0 = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
+    return losses, params_w0, sim, (params, ef)
+
+
+def worst_rel_diff(tree_a, tree_b) -> float:
+    """max over leaves of max|a−b| / max|b| — the subprocess linearity
+    check's metric (check_linearity.py)."""
+    worst = 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(tree_a),
+                    jax.tree_util.tree_leaves(tree_b)):
+        a, b = np.asarray(a), np.asarray(b)
+        worst = max(worst, float(np.max(np.abs(a - b))
+                                 / (np.max(np.abs(b)) + 1e-12)))
+    return worst

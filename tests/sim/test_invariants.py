@@ -1,0 +1,171 @@
+"""W-worker invariants of the compression engine itself, replayed on the
+SimMesh substrate: the 2-collectives-per-step communication model, warm-start
+subspace tracking (§4.2 / Theorem I) under worker noise, the ``error_mode``
+semantics, and sim-vs-single-device exactness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import error_feedback as ef_lib
+from repro.core import matrixize, powersgd
+from repro.core.compressors import PowerSGDCompressor
+from repro.core.dist import CollectiveStats, SINGLE
+from repro.core.powersgd import PowerSGDConfig
+from repro.core.simmesh import SimMesh
+from repro.launch.train import TrainHyper, make_sim_train_step
+
+from _helpers import KEY, sim_train
+
+SPECS = {"w": matrixize.MatrixSpec("matrix", 0)}
+
+
+# ---------------------------------------------------------------------------
+# communication model
+# ---------------------------------------------------------------------------
+
+def test_two_collectives_per_step():
+    """The bucketed engine's invariant survives the W-worker step: exactly 2
+    data-axis collectives per optimizer step, however many weight matrices
+    (CollectiveStats counts identically under SimBackend)."""
+    stats = CollectiveStats()
+    sim_train(workers=2, steps=1, stats=stats)
+    assert stats.data_collectives == 2, stats.sizes
+
+
+def test_per_leaf_engine_collective_count():
+    """``bucketing="off"`` is the contrast case: 2 collectives per *matrix*
+    plus 1 per uncompressed leaf — the latency-bound pattern the bucketed
+    engine exists to avoid."""
+    from repro.models import model as model_lib
+
+    cfg = get_config("llama3-8b", reduced=True)
+    mspecs = model_lib.mspecs(cfg)
+    n_mat = sum(1 for s in jax.tree_util.tree_leaves(
+        mspecs, is_leaf=lambda x: isinstance(x, matrixize.MatrixSpec))
+        if s.is_compressed())
+    n_vec = sum(1 for s in jax.tree_util.tree_leaves(
+        mspecs, is_leaf=lambda x: isinstance(x, matrixize.MatrixSpec))
+        if not s.is_compressed())
+    stats = CollectiveStats()
+    sim_train(workers=2, steps=1, stats=stats,
+              compressor=PowerSGDCompressor(rank=2, bucketing="off"))
+    assert stats.data_collectives == 2 * n_mat + n_vec, (
+        stats.data_collectives, n_mat, n_vec)
+
+
+# ---------------------------------------------------------------------------
+# warm-start subspace tracking under per-worker noise (§4.2)
+# ---------------------------------------------------------------------------
+
+def _decaying_matrix(key, n=48, m=32, decay=0.7):
+    u, _ = jnp.linalg.qr(jax.random.normal(key, (n, n)))
+    v, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (m, m)))
+    s = decay ** jnp.arange(m)
+    return (u[:, :m] * s) @ v.T
+
+
+def test_warm_start_tracks_subspace_across_workers():
+    """Each worker holds M̄ + ζ_w with Σ_w ζ_w = 0: the worker mean is M̄, so
+    repeated warm-started rank-r steps must converge to the best rank-r
+    approximation of M̄ (power iteration through the *aggregated* factors —
+    the W-worker reading of Theorem I)."""
+    W, r = 4, 4
+    key = jax.random.key(7)
+    m_bar = _decaying_matrix(key)
+    noise = jax.random.normal(jax.random.fold_in(key, 2),
+                              (W - 1,) + m_bar.shape) * 0.1
+    noise = jnp.concatenate([noise, -jnp.sum(noise, 0, keepdims=True)])
+    deltas_w = {"w": m_bar[None] + noise}           # (W, n, m), mean = M̄
+
+    cfg = PowerSGDConfig(rank=r, warm_start=True)
+    sim = SimMesh(W)
+    state = sim.replicate(powersgd.init_state(
+        cfg, {"w": jax.ShapeDtypeStruct(m_bar.shape, m_bar.dtype)},
+        SPECS, KEY))
+
+    def one_step(deltas, state):
+        out = powersgd.compress_aggregate(cfg, deltas, state, SPECS,
+                                          ctx=sim.ctx())
+        return out.agg, out.state
+
+    step = jax.jit(sim.run(one_step))
+    errs = []
+    for _ in range(25):
+        agg, state = step(deltas_w, state)
+        errs.append(float(jnp.linalg.norm(m_bar - agg["w"][0])))
+
+    u, s, vt = jnp.linalg.svd(m_bar)
+    best = float(jnp.linalg.norm(
+        m_bar - (u[:, :r] * s[:r]) @ vt[:r]))
+    assert errs[-1] < 1.05 * best + 1e-6, (errs[-1], best)
+    assert errs[-1] < 0.8 * errs[0]                 # it actually *tracked*
+    sim.assert_replicated(state, "Q factors")
+
+
+# ---------------------------------------------------------------------------
+# error_mode="local" vs "global" (Alg. 2 literal vs reference impl)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("error_mode", ["local", "global"])
+def test_error_mode_recon_replication(error_mode):
+    """"global" memorizes against the *aggregated* reconstruction (identical
+    on every worker); "local" against the worker's own back-projection
+    (Alg. 2 line 7 literally) — so recon must replicate across workers in
+    global mode and diverge in local mode."""
+    W = 4
+    key = jax.random.key(3)
+    deltas_w = {"w": jax.random.normal(key, (W, 24, 16))}
+    cfg = PowerSGDConfig(rank=2, error_mode=error_mode)
+    sim = SimMesh(W)
+    state = sim.replicate(powersgd.init_state(
+        cfg, {"w": jax.ShapeDtypeStruct((24, 16), jnp.float32)},
+        SPECS, KEY))
+
+    def one_step(deltas, state):
+        out = powersgd.compress_aggregate(cfg, deltas, state, SPECS,
+                                          ctx=sim.ctx())
+        return out.agg, out.recon, out.state
+
+    agg, recon, _ = jax.jit(sim.run(one_step))(deltas_w, state)
+    sim.assert_replicated(agg, "agg")
+    r = np.asarray(recon["w"])
+    identical = bool((r == r[:1]).all())
+    assert identical == (error_mode == "global"), error_mode
+
+
+# ---------------------------------------------------------------------------
+# sim(W=1) ≡ single-device SINGLE context, bit-exactly
+# ---------------------------------------------------------------------------
+
+def test_sim_one_worker_matches_single_device_bitexact():
+    """A 1-worker SimMesh is the SINGLE context plus a size-1 stacked axis:
+    the compressor must produce bit-identical factors and reconstructions."""
+    key = jax.random.key(11)
+    delta = {"w": jax.random.normal(key, (24, 16))}
+    cfg = PowerSGDConfig(rank=2)
+    state0 = powersgd.init_state(
+        cfg, {"w": jax.ShapeDtypeStruct((24, 16), jnp.float32)}, SPECS, KEY)
+
+    ref = powersgd.compress_aggregate(cfg, delta, state0, SPECS, ctx=SINGLE)
+
+    sim = SimMesh(1)
+
+    def one_step(deltas, state):
+        out = powersgd.compress_aggregate(cfg, deltas, state, SPECS,
+                                          ctx=sim.ctx())
+        return out.agg, out.recon, out.state
+
+    agg, recon, new_state = sim.run(one_step)(
+        sim.replicate(delta), sim.replicate(state0))
+    np.testing.assert_array_equal(np.asarray(agg["w"][0]),
+                                  np.asarray(ref.agg["w"]))
+    np.testing.assert_array_equal(np.asarray(recon["w"][0]),
+                                  np.asarray(ref.recon["w"]))
+    np.testing.assert_array_equal(np.asarray(new_state["w"][0]),
+                                  np.asarray(ref.state["w"]))

@@ -1,0 +1,78 @@
+"""Paper Lemma 3 / Appendix A.3, in-process: W-worker EF-PowerSGD training
+equals 1 worker with the full batch — exactly (up to f32 reassociation).
+
+This is the SimMesh port of ``tests/subprocess_scripts/check_linearity.py``
+(which needs 8 fake XLA devices and a subprocess per mesh shape).  Here the
+W workers are a stacked vmap axis on the single CPU device, so the whole
+W ∈ {1, 2, 8} sweep runs in seconds and is bit-deterministic.  The retained
+subprocess smoke test (``tests/test_multiworker.py``, ``-m slow``) pins the
+same invariant on a real shard_map mesh.
+"""
+
+import numpy as np
+import pytest
+
+from _helpers import sim_train, worst_rel_diff
+
+# the subprocess check's tolerance: f32 reassociation across the
+# worker-mean, nothing else
+TOL = 5e-5
+
+
+@pytest.fixture(scope="module")
+def single_worker_params():
+    _, params, _, _ = sim_train(workers=1)
+    return params
+
+
+@pytest.mark.parametrize("workers", [2, 8])
+def test_w_workers_equal_single(workers, single_worker_params):
+    """Splitting the global batch over W workers must not change training."""
+    _, params, _, _ = sim_train(workers=workers)
+    worst = worst_rel_diff(params, single_worker_params)
+    assert worst < TOL, f"linearity violated at W={workers}: {worst:.3e}"
+
+
+@pytest.mark.parametrize("workers", [2, 8])
+def test_workers_stay_bit_identical(workers):
+    """Data-parallel sync invariant: every update is a function of
+    all-reduced quantities only, so worker replicas never diverge."""
+    _, _, sim, (params, ef) = sim_train(workers=workers, steps=2)
+    sim.assert_replicated(params, "params")
+    sim.assert_replicated(ef.momentum, "momentum")
+    sim.assert_replicated(ef.comp, "Q factors")
+
+
+def test_heterogeneous_batch_sizes_equal_single(single_worker_params):
+    """Weighted linearity: workers with *different* batch sizes (weights ∝
+    local token count) still reproduce the full-batch run exactly.
+
+    Worker 0 owns 2 of the 8 sequences, worker 1 owns 6; worker 0's unused
+    rows are padding (labels −1 → masked from the loss, zero gradient).
+    The weighted worker-mean with w = valid-token count equals the global
+    token mean — the generalization of Lemma 3 the capacity-heterogeneity
+    scenario relies on.  Same driver defaults as the fixture, so the only
+    deltas are the shard layout and the weights."""
+    import jax.numpy as jnp
+
+    sizes = (2, 6)
+    pad_to = max(sizes)
+
+    def stack_heterogeneous(batch):
+        """(8, S) global batch → (2, 6, S) with worker 0 rows 2..5 padded."""
+        out = {}
+        for k, v in batch.items():
+            w0, w1 = v[:sizes[0]], v[sizes[0]:]
+            pad = ((0, pad_to - sizes[0]),) + ((0, 0),) * (v.ndim - 1)
+            fill = -1 if k == "labels" else 0  # -1 masks the loss
+            out[k] = jnp.stack([jnp.pad(w0, pad, constant_values=fill), w1])
+        return out
+
+    weights = np.array(sizes, np.float32)  # ∝ valid-token counts
+
+    _, got, sim, (params, _) = sim_train(
+        workers=2, shard_fn=stack_heterogeneous,
+        weights_for_step=lambda step: weights)
+    sim.assert_replicated(params, "params")
+    worst = worst_rel_diff(got, single_worker_params)
+    assert worst < TOL, f"weighted linearity violated: {worst:.3e}"

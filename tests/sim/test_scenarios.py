@@ -1,0 +1,89 @@
+"""Injected W-worker scenarios that subprocess meshes cannot express:
+worker dropout, straggler-skipped rounds, divergent per-worker EF memories.
+Error feedback must keep converging through all of them (Alg. 2's claim that
+the compression error is *memorized*, not lost)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import MarkovLM
+
+from _helpers import sim_train
+
+
+def _learnable_stream():
+    # order-1 with 8 token clusters: learnable in tens of steps AND low-rank
+    # gradients — the same regime test_system.py trains in
+    return MarkovLM(vocab=1024, seed=0, order=1, clusters=8)
+
+
+def test_worker_dropout_converges():
+    """One of 4 workers drops out of aggregation every round (rotating), so
+    every worker's contribution is lost 25% of the time.  Training still
+    converges and replicas stay in sync: a dropped worker still *receives*
+    the aggregated update (weight 0 only removes its contribution)."""
+    W = 4
+
+    def drop_rotating(step):
+        w = np.ones((W,), np.float32)
+        w[step % W] = 0.0
+        return w
+
+    losses, _, sim, (params, ef) = sim_train(
+        workers=W, steps=40, batch=8, seq=64,
+        weights_for_step=drop_rotating, data=_learnable_stream())
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5, losses
+    sim.assert_replicated(params, "params")
+    for leaf in jax.tree_util.tree_leaves(params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_straggler_skipped_rounds_converge():
+    """A persistent straggler (worker 3) misses every other round.  Its EF
+    memory keeps accumulating what the aggregate missed, so convergence
+    survives with a biased-but-bounded error process."""
+    W = 4
+
+    def straggler(step):
+        w = np.ones((W,), np.float32)
+        if step % 2 == 1:
+            w[3] = 0.0
+        return w
+
+    losses, _, sim, (params, _) = sim_train(
+        workers=W, steps=40, batch=8, seq=64,
+        weights_for_step=straggler, data=_learnable_stream())
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5, losses
+    sim.assert_replicated(params, "params")
+
+
+def test_heterogeneous_batches_converge():
+    """Workers weighted ∝ their (unequal) token counts converge too — the
+    exactness half of this scenario is test_linearity.py::
+    test_heterogeneous_batch_sizes_equal_single."""
+    W = 4
+    weights = np.array([1.0, 1.0, 3.0, 3.0], np.float32)
+
+    losses, _, sim, (params, _) = sim_train(
+        workers=W, steps=40, batch=8, seq=64,
+        weights_for_step=lambda step: weights, data=_learnable_stream())
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5, losses
+    sim.assert_replicated(params, "params")
+
+
+def test_error_memories_diverge_but_params_do_not():
+    """Algorithm 2's per-worker state, observable at last: each worker's
+    error buffer e_w tracks *its own* data shard, so the buffers must
+    diverge across workers while the all-reduced params stay identical."""
+    _, _, sim, (params, ef) = sim_train(workers=4, steps=3,
+                                        data=_learnable_stream())
+    sim.assert_replicated(params, "params")
+    # at least the big matrix leaves' error buffers must differ across
+    # workers (each worker compressed a different Δ_w)
+    diverged = 0
+    for leaf in jax.tree_util.tree_leaves(ef.error):
+        a = np.asarray(leaf)
+        if a.ndim > 1 and not (a == a[:1]).all():
+            diverged += 1
+    assert diverged > 0, "per-worker EF memories unexpectedly identical"

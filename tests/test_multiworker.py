@@ -1,11 +1,21 @@
-"""Multi-device semantics, via subprocesses with 8 fake host devices
-(XLA locks the device count at first init, so these cannot run in-process)."""
+"""Slow tier: real multi-device semantics via subprocesses with 8 fake host
+devices (XLA locks the device count at first init, so these cannot run
+in-process).  Everything here carries ``@pytest.mark.slow`` and is excluded
+from the default (fast) run — select with ``pytest -m slow``.
+
+The fast in-process equivalents live in ``tests/sim/`` (SimMesh substrate):
+``check_linearity.py`` is retained below as the one subprocess smoke test
+pinning Lemma 3 on a *real* shard_map mesh; its W-sweep now runs in-process
+(``tests/sim/test_linearity.py``), as does the train-step portion of the
+mesh dry-run (``tests/sim/test_dryrun.py``)."""
 
 import os
 import subprocess
 import sys
 
 import pytest
+
+pytestmark = [pytest.mark.slow, pytest.mark.timeout(1200)]
 
 SCRIPTS = os.path.join(os.path.dirname(__file__), "subprocess_scripts")
 
@@ -23,7 +33,9 @@ def _run(script, timeout=900):
 
 
 def test_linearity_multiworker_equals_single():
-    """Paper Lemma 3: W-worker EF-PowerSGD ≡ 1 worker with the full batch."""
+    """Paper Lemma 3: W-worker EF-PowerSGD ≡ 1 worker with the full batch —
+    the retained subprocess smoke test backing tests/sim/test_linearity.py
+    with a real (4, 2) shard_map mesh."""
     out = _run("check_linearity.py")
     assert "LINEARITY_OK" in out
 
@@ -34,6 +46,8 @@ def test_sharded_decode_matches_single_device():
 
 
 def test_dryrun_on_test_meshes():
+    """Full lower+compile+roofline on the 2×2 / 2×2×2 meshes (train, prefill
+    and decode) — the parts of the dry-run SimMesh cannot simulate."""
     out = _run("check_test_mesh_dryrun.py")
     assert "TEST_MESH_DRYRUN_OK" in out
 

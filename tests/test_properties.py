@@ -1,0 +1,189 @@
+"""Property-based tests for the bucket planner and the orthogonalizers.
+
+Runs under hypothesis when installed, otherwise under the deterministic
+fallback sampler (tests/_hypothesis_fallback.py) — the strategies stick to
+the ``st.integers`` subset both implement.  Properties:
+
+* planner: per-entry padding-waste bound, never-crop, exact coverage,
+  offset contiguity, pack/unpack roundtrip exactness;
+* planner: permutation invariance of the plan (distinct-area inputs);
+* orthogonalizers: orthonormality on near-rank-deficient inputs, and
+  invariance under the bucket engine's zero-row padding.
+"""
+
+import math
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal container: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import matrixize
+from repro.core.orthogonalize import cholesky_qr, gram_schmidt
+
+
+# ---------------------------------------------------------------------------
+# planner generators (seeded — both hypothesis and the fallback drive them
+# through integer draws only)
+# ---------------------------------------------------------------------------
+
+def _random_shapes(seed: int, n_shapes: int, distinct_areas: bool = False):
+    """A plan_buckets input: (count, n, m) tuples interleaved with Nones."""
+    rng = random.Random(seed)
+    shapes, seen = [], set()
+    while len(shapes) < n_shapes:
+        if not distinct_areas and rng.random() < 0.2:
+            shapes.append(None)  # uncompressed leaf
+            continue
+        c = rng.randint(1, 4)
+        n = rng.randint(1, 96)
+        m = rng.randint(1, 96)
+        if distinct_areas:
+            if n * m in seen:
+                continue
+            seen.add(n * m)
+        shapes.append((c, n, m))
+    return shapes
+
+
+def _check_plan_invariants(shapes, plan, tolerance):
+    seen = {}
+    for b in plan.buckets:
+        off = 0
+        for e in b.entries:
+            c, n, m = shapes[e.index]
+            # never crops, never splits
+            assert (e.count, e.n, e.m) == (c, n, m)
+            assert e.n <= b.n and e.m <= b.m
+            # padding-waste bound: the bucket's padded area exceeds the
+            # entry's own by at most `tolerance` (relative)
+            assert b.n * b.m <= (1.0 + tolerance) * n * m + 1e-9, (
+                (b.n, b.m), (n, m), tolerance)
+            # contiguous slot layout
+            assert e.offset == off
+            off += e.count
+            seen[e.index] = seen.get(e.index, 0) + 1
+        assert b.count == off
+    # exact coverage: every compressed leaf exactly once, Nones never
+    expect = {i for i, s in enumerate(shapes) if s is not None}
+    assert set(seen) == expect and all(v == 1 for v in seen.values())
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       n_shapes=st.integers(min_value=1, max_value=24),
+       tol_pct=st.integers(min_value=0, max_value=100))
+def test_planner_waste_bound_and_coverage(seed, n_shapes, tol_pct):
+    tolerance = tol_pct / 100.0
+    shapes = _random_shapes(seed, n_shapes)
+    plan = matrixize.plan_buckets(shapes, tolerance=tolerance)
+    _check_plan_invariants(shapes, plan, tolerance)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       n_shapes=st.integers(min_value=1, max_value=16),
+       tol_pct=st.integers(min_value=0, max_value=60))
+def test_planner_permutation_invariant(seed, n_shapes, tol_pct):
+    """With distinct areas the largest-area-first greedy order is fully
+    determined, so permuting the input leaves must not change which bucket
+    shape hosts each leaf."""
+    tolerance = tol_pct / 100.0
+    shapes = _random_shapes(seed, n_shapes, distinct_areas=True)
+    plan = matrixize.plan_buckets(shapes, tolerance=tolerance)
+
+    rng = random.Random(seed ^ 0x5EED)
+    perm = list(range(len(shapes)))
+    rng.shuffle(perm)
+    shuffled = [shapes[p] for p in perm]
+    plan_p = matrixize.plan_buckets(shuffled, tolerance=tolerance)
+    _check_plan_invariants(shuffled, plan_p, tolerance)
+
+    def host(plan, idx):
+        b_id, _ = plan.entry_for(idx)
+        b = plan.buckets[b_id]
+        return (b.n, b.m)
+
+    for new_idx, old_idx in enumerate(perm):
+        assert host(plan_p, new_idx) == host(plan, old_idx)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       n_shapes=st.integers(min_value=1, max_value=10))
+def test_pack_unpack_roundtrip(seed, n_shapes):
+    """Zero-padding into bucket slabs and cropping back is exact."""
+    shapes = _random_shapes(seed, n_shapes)
+    plan = matrixize.plan_buckets(shapes, tolerance=0.5)
+    rng = np.random.RandomState(seed % 2**31)
+    arrays = {i: jnp.asarray(rng.randn(c, n, m).astype(np.float32))
+              for i, s in enumerate(shapes) if s is not None
+              for c, n, m in [s]}
+    for b in plan.buckets:
+        slab = matrixize.pack_matrices(b, arrays)
+        assert slab.shape == (b.count, b.n, b.m)
+        for e in b.entries:
+            got = matrixize.unpack_entry(slab, e, e.n, e.m)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(arrays[e.index]))
+
+
+# ---------------------------------------------------------------------------
+# orthogonalizers
+# ---------------------------------------------------------------------------
+
+def _near_deficient(seed: int, n: int, r: int, rank: int, noise: float):
+    """(n, r) matrix whose columns span only `rank` directions + noise —
+    the hard case for orthogonalization (κ(P) → 1/noise)."""
+    rng = np.random.RandomState(seed % 2**31)
+    base = rng.randn(n, rank).astype(np.float32)
+    mix = rng.randn(rank, r).astype(np.float32)
+    p = base @ mix + noise * rng.randn(n, r).astype(np.float32)
+    return jnp.asarray(p)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       r=st.integers(min_value=2, max_value=8),
+       deficiency=st.integers(min_value=1, max_value=8))
+def test_orthogonalizers_near_rank_deficient(seed, r, deficiency):
+    """Both orthogonalizers must return finite, near-orthonormal factors
+    even when the input columns are nearly linearly dependent (warm-started
+    P collapses toward the top singular directions — this is the *common*
+    case after convergence, not a corner)."""
+    rank = max(1, r - deficiency)  # true column rank before noise
+    p = _near_deficient(seed, n=64, r=r, rank=rank, noise=1e-3)
+    for orth in (gram_schmidt, cholesky_qr):
+        q = orth(p)
+        assert bool(jnp.all(jnp.isfinite(q))), orth.__name__
+        gram = np.asarray(q.T @ q)
+        # columns with survivable mass must be orthonormal; the tolerance
+        # is loose for gram_schmidt whose eps-regularised near-zero
+        # residual columns are *small* rather than unit (by design: they
+        # contribute ~nothing to P̂ Qᵀ instead of amplifying noise)
+        off = gram - np.diag(np.diag(gram))
+        assert np.max(np.abs(off)) < 5e-2, (orth.__name__, gram)
+        assert np.all(np.diag(gram) < 1.0 + 1e-4), (orth.__name__, gram)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       r=st.integers(min_value=1, max_value=6),
+       pad=st.integers(min_value=1, max_value=32))
+def test_orthogonalization_ignores_zero_row_padding(seed, r, pad):
+    """Bucket-engine exactness: zero-padded rows contribute nothing to any
+    column inner product, so orthogonalizing a padded stack equals
+    orthogonalizing the unpadded matrix."""
+    rng = np.random.RandomState(seed % 2**31)
+    p = jnp.asarray(rng.randn(40, r).astype(np.float32))
+    padded = jnp.concatenate([p, jnp.zeros((pad, r), jnp.float32)])
+    for orth in (gram_schmidt, cholesky_qr):
+        q = np.asarray(orth(p))
+        qp = np.asarray(orth(padded))
+        np.testing.assert_allclose(qp[:40], q, atol=1e-6)
+        np.testing.assert_allclose(qp[40:], 0.0, atol=1e-6)

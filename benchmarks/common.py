@@ -175,7 +175,15 @@ LATENCY = {"nccl_10gbit": 30e-6, "gloo_10gbit": 150e-6}
 
 def comm_time(bytes_per_worker: float, workers: int, allreduce: bool,
               backend: str = "nccl_10gbit") -> float:
-    """Seconds to aggregate one step's messages among W workers."""
+    """Seconds to aggregate one step's messages among W workers.
+
+    ``bytes_per_worker`` is the payload ONE worker contributes; the
+    all-gather branch scales it by (W−1) — every worker receives every
+    other worker's payload — which is exactly the W-scaling
+    :meth:`repro.core.dist.CollectiveStats.bytes_per_collective` reports for
+    ``kind="gather"`` records.  Mis-modeling gather traffic as all-reduce
+    (constant in W) flips speedup conclusions for sign/top-K/Atomo.
+    """
     import math
 
     bw = BW[backend]
@@ -187,6 +195,23 @@ def comm_time(bytes_per_worker: float, workers: int, allreduce: bool,
         return 2 * (workers - 1) / workers * bytes_per_worker / bw + lat * rounds
     # all-gather: every worker receives (W−1) messages
     return (workers - 1) * bytes_per_worker / bw + lat * (workers - 1)
+
+
+def comm_time_from_stats(stats, workers: int,
+                         backend: str = "nccl_10gbit") -> float:
+    """Seconds of modeled gradient exchange for one recorded step.
+
+    Walks a :class:`repro.core.dist.CollectiveStats` trace and applies the
+    α-β model per collective with its *actual* wire size, itemsize and
+    transport kind — reduce-pattern entries stay flat in W, gather-pattern
+    entries pay the (W−1)-fold receive traffic.  This is the honest
+    per-engine model: latency multiplies by the number of collectives, which
+    is exactly what the fused transport engine minimizes.
+    """
+    total = 0.0
+    for size, itemsize, kind in zip(stats.sizes, stats.itemsizes, stats.kinds):
+        total += comm_time(size * itemsize, workers, kind == "reduce", backend)
+    return total
 
 
 def measure_coding_time(compressor: Compressor, params, specs,

@@ -52,6 +52,8 @@ def main() -> None:
         "table7_lstm": lambda: tables.table7_lstm(40 if args.quick else 120),
         "fig3_scaling": lambda: tables.fig3_scaling(params_small, specs_small),
         "comm_profile": lambda: tables.comm_profile(params_small, specs_small),
+        "zoo_transport_profile": lambda: tables.zoo_transport_profile(
+            params_small, specs_small),
         "appendixD_transformer": lambda: tables.appendixD_transformer(spec),
     }
     if args.only:

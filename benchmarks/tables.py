@@ -249,6 +249,55 @@ def comm_profile(params, specs) -> list:
     return rows
 
 
+def zoo_transport_profile(params, specs, workers: int = 16) -> list:
+    """Beyond-paper: the transport engine's profile for the WHOLE zoo.
+
+    For every compressor in the registry: how many fused data-axis
+    collectives one step issues, split reduce vs gather, the wire bytes each
+    pattern carries (gather scaled by W — the traffic a worker's NIC
+    actually sees), and the modeled exchange time per step.  This is the
+    table that shows the paper's §3 argument end-to-end: linear schemes ride
+    O(1) flat all-reduces whose cost is flat in W; non-linear schemes pay a
+    genuine W-scaled all-gather.
+    """
+    from benchmarks.common import comm_time_from_stats
+    from repro.core.compressors import make_compressor
+    from repro.core.dist import CollectiveStats, MeshCtx
+
+    zoo = ("identity", "powersgd", "powersgd_per_leaf", "unbiased_rank_k",
+           "random_block", "random_k", "sign_norm", "top_k", "spectral_atomo",
+           "exact_rank_k")
+    key = jax.random.key(0)
+    shapes = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.ones_like(p) * 0.01, params)
+    rows = []
+    for name in zoo:
+        comp = make_compressor(name, rank=2)
+        stats = CollectiveStats()
+        out = comp.step(grads, comp.init(shapes, specs, key), specs,
+                        ctx=MeshCtx(stats=stats), key=key)
+        reduce_b = sum(s * i for s, i, k in zip(stats.sizes, stats.itemsizes,
+                                                stats.kinds) if k == "reduce")
+        gather_b = sum(s * i for s, i, k in zip(stats.sizes, stats.itemsizes,
+                                                stats.kinds) if k == "gather")
+        rows.append({
+            "algorithm": name,
+            "wire_mode": getattr(comp, "wire_mode", "reduce"),
+            "collectives_per_step": stats.data_collectives,
+            "reduce_collectives": stats.reduce_collectives,
+            "gather_collectives": stats.gather_collectives,
+            "reduce_kb_per_step": round(reduce_b / 1024, 2),
+            "gather_kb_per_step_w%d" % workers:
+                round(gather_b * workers / 1024, 2),
+            "payload_bits_per_worker": int(out.bits_per_worker),
+            "modeled_comm_ms_w%d" % workers:
+                round(comm_time_from_stats(stats, workers) * 1e3, 3),
+        })
+    return rows
+
+
 def fig3_scaling(params, specs) -> list:
     """Fig. 3: modeled epoch time vs workers for both backends.
 

@@ -11,14 +11,16 @@ Demonstrates, step by step:
   4. a full Error-Feedback SGD loop (Algorithm 2) on a least-squares problem,
      converging to the same solution as uncompressed SGD,
   5. the bucketed batched-compression engine: one step of a multi-layer
-     model issues exactly 2 data-axis collectives instead of 2 per matrix.
+     model issues exactly 2 data-axis collectives instead of 2 per matrix,
+  6. the unified transport engine across the zoo: linear schemes ride one
+     fused all-reduce, non-linear schemes a genuine W-scaled all-gather.
 """
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import error_feedback, matrixize
-from repro.core.compressors import PowerSGDCompressor
+from repro.core.compressors import PowerSGDCompressor, make_compressor
 from repro.core.dist import CollectiveStats, MeshCtx
 from repro.core.powersgd import (PowerSGDConfig, compress_aggregate,
                                  init_state)
@@ -169,6 +171,22 @@ diff5 = max(float(jnp.abs(out5.agg[k] - agg_ref[k]).max()) for k in mgrads)
 print(f"  max |bucketed - per-leaf| over the update = {diff5:.2e}")
 print("  (same math, fused into one flat all-reduce per phase — the bucketed"
       "\n   engine is the default; pass bucketing='off' for the per-leaf path)")
+
+# ---------------------------------------------------------------------------
+section("6. The whole zoo through the transport engine")
+
+# every compressor declares its payloads; the engine fuses them into O(1)
+# collectives — all-reduce for linear schemes, W-scaled all-gather otherwise
+for name in ("identity", "powersgd", "random_k", "sign_norm", "top_k"):
+    stats = CollectiveStats()
+    comp6 = make_compressor(name, rank=2)
+    comp6.step(mgrads, comp6.init(mshapes, mspecs, KEY), mspecs,
+               ctx=MeshCtx(stats=stats), key=KEY)
+    print(f"  {name:10s}: {stats.data_collectives} collectives/step "
+          f"({stats.reduce_collectives} reduce, "
+          f"{stats.gather_collectives} gather)")
+print("  (gather bytes scale with W on the wire — CollectiveStats records"
+      "\n   the fanout; see benchmarks/run.py --only zoo_transport_profile)")
 
 print("\nDone. PowerSGD tracks uncompressed SGD while sending "
       f"{(dim_in*dim_out)/(2*(dim_in+dim_out)):.0f}x fewer floats per step.")

@@ -13,6 +13,7 @@ from repro.core.dist import (
 )
 from repro.core.simmesh import SimMesh
 from repro.core.matrixize import MatrixSpec, default_spec
+from repro.core.engine import CompressOut, Encoded, MatrixPayloads, Transport
 from repro.core.powersgd import PowerSGDConfig, compress_aggregate, init_state
 from repro.core.compressors import (
     Compressor,

@@ -12,6 +12,20 @@ error-feedback update.  ``allreduce`` marks whether the scheme is linear
 (all-reduce aggregatable) — the property the paper identifies as the key to
 scalability (§3).
 
+Transport: the fused engine vs the per-leaf reference path
+----------------------------------------------------------
+Every compressor runs through the unified transport engine
+(:mod:`repro.core.engine`) by default: each scheme *declares* what travels
+per leaf (``encode_leaf`` / ``decode_leaf``) and the engine fuses all
+payloads into O(1) data-axis collectives per step — an all-reduce for
+linear schemes (``wire_mode="reduce"``), a genuine W-scaled all-gather for
+non-linear ones (``wire_mode="gather"``; every worker decodes all W
+payloads, and :class:`~repro.core.dist.CollectiveStats` records the
+gather-pattern traffic honestly).  ``transport="per_leaf"`` keeps the
+original one-collective-per-leaf reference path (numerically matched by the
+engine; see ``tests/sim/test_zoo_conformance.py``).  PowerSGD exposes the
+same switch as ``bucketing="auto"|"off"``.
+
 ``bits_per_worker`` accounting
 ------------------------------
 ``CompressOut.bits_per_worker`` is the number of bits each worker (model
@@ -31,35 +45,81 @@ shard) contributes to gradient exchange per step — the paper's Tables
   cluster-wide traffic (all-gather schemes) — ``benchmarks.common.comm_time``
   models the difference between all-reduce and all-gather scaling.
 
-Actual on-the-wire bytes per collective (including bucket padding) are
+Actual on-the-wire bytes per collective (including bucket padding, the real
+wire itemsize per chunk, and the W-scaling of gather payloads) are
 observable via :class:`repro.core.dist.CollectiveStats`.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import matrixize, powersgd
+from repro.core import engine, matrixize, powersgd
 from repro.core.dist import MeshCtx, SINGLE
-from repro.core.powersgd import PowerSGDOut as CompressOut, _leaf_key
+from repro.core.engine import CompressOut, Encoded, leaf_key as _leaf_key
+
+TRANSPORTS = ("fused", "per_leaf")
 
 
 class Compressor:
-    """Base class; subclasses set ``name`` and ``allreduce``."""
+    """Base class; subclasses set ``name``, ``allreduce`` and the engine
+    protocol (``encode_leaf`` / ``decode_leaf``).
+
+    ``wire_mode`` defaults to the transport the ``allreduce`` flag implies
+    ("reduce" for linear schemes, "gather" otherwise); oracles that need
+    the *dense* aggregate before decoding (ExactRankK) override it.
+    ``recon_is_agg`` marks schemes whose error-feedback reconstruction is
+    the aggregated decode rather than the worker-local one.
+    """
 
     name: str = "base"
     allreduce: bool = True
     stateful: bool = False   # carries per-matrix state (e.g. warm-start Q)
+    recon_is_agg: bool = False
+
+    def __init__(self, transport: str = "fused", wire_dtype: str = "auto",
+                 max_chunk_bytes: Optional[int] = None):
+        if transport not in TRANSPORTS:
+            raise ValueError(
+                f"unknown transport {transport!r}; use one of {TRANSPORTS}")
+        if wire_dtype not in matrixize.WIRE_DTYPES:
+            raise ValueError(
+                f"unknown wire_dtype {wire_dtype!r}; "
+                f"use one of {matrixize.WIRE_DTYPES}")
+        self.transport = transport
+        self.wire_dtype = wire_dtype
+        self.max_chunk_bytes = max_chunk_bytes
+
+    @property
+    def wire_mode(self) -> str:
+        return "reduce" if self.allreduce else "gather"
 
     def init(self, shapes, specs, key):
         return None
 
     def step(self, deltas, state, specs, ctx: MeshCtx = SINGLE, key=None) -> CompressOut:
+        if self.transport == "fused":
+            return engine.run_step(self, deltas, state, specs, ctx, key,
+                                   wire_dtype=self.wire_dtype,
+                                   max_chunk_bytes=self.max_chunk_bytes)
+        return self._step_per_leaf(deltas, state, specs, ctx, key)
+
+    # -- engine protocol ----------------------------------------------------
+    def encode_leaf(self, path, g, q, spec, key) -> Optional[Encoded]:
+        """Declare what travels for one leaf; ``None`` = uncompressed."""
+        raise NotImplementedError
+
+    def decode_leaf(self, enc: Encoded, payload) -> jax.Array:
+        """Reconstruct a full-shape tensor from one (possibly aggregated)
+        payload."""
+        raise NotImplementedError
+
+    # -- per-leaf reference path --------------------------------------------
+    def _step_per_leaf(self, deltas, state, specs, ctx, key) -> CompressOut:
         raise NotImplementedError
 
 
@@ -102,12 +162,22 @@ class IdentityCompressor(Compressor):
     """Full-precision baseline.
 
     bits_per_worker: ``32 · numel`` for every leaf (nothing is compressed).
+    Transport: every leaf is its own payload, so the fused engine reduces
+    the entire gradient in ONE flat collective per step — the classic
+    gradient-bucketing data path of a DDP implementation.
     """
 
     name = "identity"
     allreduce = True
 
-    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+    def encode_leaf(self, path, g, q, spec, key):
+        return Encoded(payload=(g,),
+                       bits=matrixize.uncompressed_floats(g.shape) * 32)
+
+    def decode_leaf(self, enc, payload):
+        return payload[0]
+
+    def _step_per_leaf(self, deltas, state, specs, ctx, key):
         bits = [0]
 
         def leaf(path, g, q, spec):
@@ -131,6 +201,11 @@ class PowerSGDCompressor(Compressor):
     weight matrix); the two are numerically identical up to float32
     reassociation and share the same state layout.
 
+    PowerSGD is the zoo's one *multi-round* scheme (reduce → orthogonalize →
+    reduce), so it schedules its own :class:`~repro.core.engine.Transport`
+    phases (``core/powersgd.py``) instead of the generic single-round
+    ``engine.run_step`` driver.
+
     bits_per_worker: ``32 · r · (n + m)`` per weight matrix (the P and Q
     factors) plus ``32 · numel`` per uncompressed leaf.  Bucket zero-padding
     is excluded — it is an engine artifact, not payload (see
@@ -143,11 +218,16 @@ class PowerSGDCompressor(Compressor):
 
     def __init__(self, rank=2, orthogonalizer="gram_schmidt", warm_start=True,
                  num_iters=1, error_mode="global", use_pallas=False,
-                 bucketing="auto", bucket_pad_tolerance=0.25):
+                 bucketing="auto", bucket_pad_tolerance=0.25,
+                 wire_dtype="auto", max_chunk_bytes=None):
+        super().__init__(
+            transport="per_leaf" if bucketing == "off" else "fused",
+            wire_dtype=wire_dtype, max_chunk_bytes=max_chunk_bytes)
         self.cfg = powersgd.PowerSGDConfig(
             rank=rank, orthogonalizer=orthogonalizer, warm_start=warm_start,
             num_iters=num_iters, error_mode=error_mode, use_pallas=use_pallas,
             bucketing=bucketing, bucket_pad_tolerance=bucket_pad_tolerance,
+            wire_dtype=wire_dtype, max_chunk_bytes=max_chunk_bytes,
         )
         if num_iters > 1:
             self.name = f"powersgd_best_approx_{num_iters}it"
@@ -171,29 +251,39 @@ class UnbiasedRankK(Compressor):
     name = "unbiased_rank_k"
     allreduce = True
 
-    def __init__(self, rank=2):
+    def __init__(self, rank=2, **kw):
+        super().__init__(**kw)
         self.rank = rank
 
-    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+    def encode_leaf(self, path, g, q, spec, key):
+        ms = matrixize.matrix_shape(g.shape, spec)
+        if ms is None:
+            return None
+        batch_shape, n, m = ms
+        mat = matrixize.to_matrix(g, spec)
+        # E[UUᵀ] = I_m  ⇐  entries iid N(0, 1/r)
+        u = jax.random.normal(key, (m, self.rank)) / jnp.sqrt(self.rank)
+        p = jnp.einsum("...nm,mr->...nr", mat, u)
+        return Encoded(payload=(p,), aux=(u, g.shape, spec),
+                       bits=math.prod(batch_shape) * n * self.rank * 32)
+
+    def decode_leaf(self, enc, payload):
+        u, shape, spec = enc.aux
+        mat = jnp.einsum("...nr,mr->...nm", payload[0], u)
+        return matrixize.from_matrix(mat, shape, spec)
+
+    def _step_per_leaf(self, deltas, state, specs, ctx, key):
         bits = [0]
 
         def leaf(path, g, q, spec):
-            ms = matrixize.matrix_shape(g.shape, spec)
-            if ms is None:
+            enc = self.encode_leaf(path, g, q, spec, _leaf_key(key, path))
+            if enc is None:
                 bits[0] += matrixize.uncompressed_floats(g.shape) * 32
                 return ctx.pmean_data(g), g, None
-            batch_shape, n, m = ms
-            mat = matrixize.to_matrix(g, spec)
-            k = _leaf_key(key, path)
-            # E[UUᵀ] = I_m  ⇐  entries iid N(0, 1/r)
-            u = jax.random.normal(k, (m, self.rank)) / jnp.sqrt(self.rank)
-            p = jnp.einsum("...nm,mr->...nr", mat, u)
-            p_agg = ctx.pmean_data(p)
-            recon = jnp.einsum("...nr,mr->...nm", p, u)
-            agg = jnp.einsum("...nr,mr->...nm", p_agg, u)
-            bits[0] += math.prod(batch_shape) * n * self.rank * 32
-            return (matrixize.from_matrix(agg, g.shape, spec),
-                    matrixize.from_matrix(recon, g.shape, spec), None)
+            bits[0] += enc.bits
+            p_agg = ctx.pmean_data(enc.payload[0])
+            return self.decode_leaf(enc, (p_agg,)), \
+                self.decode_leaf(enc, enc.payload), None
 
         return _map_leaves(leaf, deltas, deltas, specs, bits)
 
@@ -204,27 +294,56 @@ class UnbiasedRankK(Compressor):
 
 class _FlatSparsifier(Compressor):
     """Common scaffolding: compress each leaf as a flat vector with budget
-    ``b = (n+m)·r`` (rank-equivalent, paper Appendix G).  Subclasses document
-    their own bits_per_worker accounting."""
+    ``b = (n+m)·r`` (rank-equivalent, paper Appendix G).  Subclasses declare
+    their payload via ``_encode_flat`` / ``_decode_flat`` and document their
+    own bits_per_worker accounting; transport (fused engine vs per-leaf
+    reference collectives) is shared here."""
 
-    def __init__(self, rank=2):
+    def __init__(self, rank=2, **kw):
+        super().__init__(**kw)
         self.rank = rank  # sets the budget b = (n+m)·r to match PowerSGD
 
-    def _leaf_flat(self, path, flat, b, key, ctx):
+    def _encode_flat(self, flat, b, key):
+        """-> (payload tuple, aux, bits) for one raveled leaf."""
         raise NotImplementedError
 
-    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+    def _decode_flat(self, aux, payload, n):
+        """-> flat (n,) reconstruction from one payload."""
+        raise NotImplementedError
+
+    def encode_leaf(self, path, g, q, spec, key):
+        if not spec.is_compressed():
+            return None
+        b = min(_budget(g.shape, spec, self.rank), g.size)
+        payload, aux, bits = self._encode_flat(g.reshape(-1), b, key)
+        return Encoded(payload=payload, aux=(aux, g.shape), bits=bits)
+
+    def decode_leaf(self, enc, payload):
+        aux, shape = enc.aux
+        return self._decode_flat(aux, payload, math.prod(shape)).reshape(shape)
+
+    def _step_per_leaf(self, deltas, state, specs, ctx, key):
         bits = [0]
 
         def leaf(path, g, q, spec):
-            if not spec.is_compressed():
+            enc = self.encode_leaf(path, g, q, spec, _leaf_key(key, path))
+            if enc is None:
                 bits[0] += matrixize.uncompressed_floats(g.shape) * 32
                 return ctx.pmean_data(g), g, None
-            b = min(_budget(g.shape, spec, self.rank), g.size)
-            k = _leaf_key(key, path)
-            agg_f, recon_f, leaf_bits = self._leaf_flat(path, g.reshape(-1), b, k, ctx)
-            bits[0] += leaf_bits
-            return agg_f.reshape(g.shape), recon_f.reshape(g.shape), None
+            bits[0] += enc.bits
+            recon = self.decode_leaf(enc, enc.payload)
+            if self.allreduce:
+                # linear: the payload itself all-reduces (one collective
+                # per payload array per leaf)
+                agg_payload = tuple(ctx.pmean_data(a) for a in enc.payload)
+                agg = self.decode_leaf(enc, agg_payload)
+            else:
+                # non-linear: mean of per-worker reconstructions.  The
+                # *numerics* are the gather path's decode-then-average, but
+                # this reference path simulates it with a dense all-reduce —
+                # the engine's allgather_flat is the honest wire pattern.
+                agg = ctx.pmean_data(recon)
+            return agg, recon, None
 
         return _map_leaves(leaf, deltas, deltas, specs, bits)
 
@@ -238,15 +357,15 @@ class RandomBlock(_FlatSparsifier):
     name = "random_block"
     allreduce = True
 
-    def _leaf_flat(self, path, flat, b, key, ctx):
+    def _encode_flat(self, flat, b, key):
         n = flat.shape[0]
         start = jax.random.randint(key, (), 0, max(n - b, 1))
         block = jax.lax.dynamic_slice(flat, (start,), (b,))
-        agg_block = ctx.pmean_data(block)
-        zeros = jnp.zeros_like(flat)
-        recon = jax.lax.dynamic_update_slice(zeros, block, (start,))
-        agg = jax.lax.dynamic_update_slice(zeros, agg_block, (start,))
-        return agg, recon, b * 32
+        return (block,), start, b * 32
+
+    def _decode_flat(self, aux, payload, n):
+        zeros = jnp.zeros((n,), payload[0].dtype)
+        return jax.lax.dynamic_update_slice(zeros, payload[0], (aux,))
 
 
 class RandomK(_FlatSparsifier):
@@ -258,50 +377,56 @@ class RandomK(_FlatSparsifier):
     name = "random_k"
     allreduce = True
 
-    def _leaf_flat(self, path, flat, b, key, ctx):
+    def _encode_flat(self, flat, b, key):
         n = flat.shape[0]
         idx = jax.random.choice(key, n, (b,), replace=False)
-        vals = flat[idx]
-        agg_vals = ctx.pmean_data(vals)
-        recon = jnp.zeros_like(flat).at[idx].set(vals)
-        agg = jnp.zeros_like(flat).at[idx].set(agg_vals)
-        return agg, recon, b * 32
+        return (flat[idx],), idx, b * 32
+
+    def _decode_flat(self, aux, payload, n):
+        return jnp.zeros((n,), payload[0].dtype).at[aux].set(payload[0])
 
 
 class SignNorm(_FlatSparsifier):
-    """Alg. 5: sign(M)·‖M‖₁/nm.  Not linear ⇒ needs all-gather.
+    """Alg. 5: sign(M)·‖M‖₁/nm.  Not linear ⇒ all-gather.
 
     bits_per_worker: ``1 · numel + 32`` (one sign bit per coordinate plus the
-    32-bit norm).
+    32-bit norm).  On the wire the signs travel as an int8 payload chunk and
+    the norms as a float chunk — ``CollectiveStats`` records the 1-byte
+    itemsize, the closest a dense-array simulation gets to the 1-bit claim.
     """
 
     name = "sign_norm"
     allreduce = False
 
-    def _leaf_flat(self, path, flat, b, key, ctx):
+    def _encode_flat(self, flat, b, key):
         n = flat.shape[0]
         scale = jnp.mean(jnp.abs(flat))
-        recon = jnp.sign(flat) * scale
-        agg = ctx.pmean_data(recon)  # mean of per-worker reconstructions (gather)
-        return agg, recon, n * 1 + 32
+        signs = jnp.sign(flat).astype(jnp.int8)
+        return (signs, scale.reshape((1,))), flat.dtype, n * 1 + 32
+
+    def _decode_flat(self, aux, payload, n):
+        signs, scale = payload
+        return signs.astype(aux) * scale[0].astype(aux)
 
 
 class TopK(_FlatSparsifier):
     """Alg. 6: the b largest-|.| coordinates.  Not linear ⇒ all-gather.
 
     bits_per_worker: ``(32 + 32) · b`` — a value and an explicit index per
-    selected coordinate.
+    selected coordinate (both travel: every worker's selection differs, so
+    the indices are a real int32 wire chunk, not a shared seed).
     """
 
     name = "top_k"
     allreduce = False
 
-    def _leaf_flat(self, path, flat, b, key, ctx):
+    def _encode_flat(self, flat, b, key):
         vals, idx = jax.lax.top_k(jnp.abs(flat), b)
-        picked = flat[idx]
-        recon = jnp.zeros_like(flat).at[idx].set(picked)
-        agg = ctx.pmean_data(recon)
-        return agg, recon, b * (32 + 32)
+        return (flat[idx], idx.astype(jnp.int32)), None, b * (32 + 32)
+
+    def _decode_flat(self, aux, payload, n):
+        picked, idx = payload
+        return jnp.zeros((n,), picked.dtype).at[idx].set(picked)
 
 
 # ---------------------------------------------------------------------------
@@ -316,13 +441,16 @@ class SpectralAtomo(Compressor):
     fallback so the whole step stays jittable).
 
     bits_per_worker: ``32 · r · (n + m)`` per matrix (r sampled singular
-    triplets, the same budget as rank-r PowerSGD).
+    triplets, the same budget as rank-r PowerSGD).  The payload is exactly
+    those triplets — ``P = U_S diag(s_S/p_S)`` and ``V_S`` — gathered from
+    every worker and decoded as ``P Vᵀ`` on the receiver.
     """
 
     name = "spectral_atomo"
     allreduce = False
 
-    def __init__(self, rank=2, attempts=8):
+    def __init__(self, rank=2, attempts=8, **kw):
+        super().__init__(**kw)
         self.rank = rank
         self.attempts = attempts
 
@@ -339,6 +467,7 @@ class SpectralAtomo(Compressor):
         return p
 
     def _compress_one(self, mat, key):
+        """One matrix → the r sampled triplets (P = u·s/p, V), the payload."""
         n, m = mat.shape
         u, s, vt = jnp.linalg.svd(mat, full_matrices=False)
         p = self._probs(s)
@@ -357,24 +486,46 @@ class SpectralAtomo(Compressor):
         topr = jnp.arange(s.shape[0]) < self.rank
         sel = jnp.where(any_ok, sel, topr)
         w = jnp.where(sel, s / jnp.maximum(p, 1e-12), 0.0)
-        recon = jnp.einsum("nk,k,km->nm", u, w, vt)
-        return recon
+        (idx,) = jnp.nonzero(sel, size=self.rank, fill_value=0)
+        # when fewer than r components exist (min(n,m) < r) the fill slots
+        # duplicate index 0 — zero their weight so decode adds exact zeros
+        valid = jnp.arange(self.rank) < jnp.sum(sel)
+        wsel = jnp.where(valid, w[idx], 0.0)
+        pfac = u[:, idx] * wsel[None, :]             # (n, r)
+        vfac = vt[idx, :].T                          # (m, r)
+        return pfac, vfac
 
-    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+    def encode_leaf(self, path, g, q, spec, key):
+        ms = matrixize.matrix_shape(g.shape, spec)
+        if ms is None:
+            return None
+        batch_shape, n, m = ms
+        mat = matrixize.to_matrix(g, spec).reshape((-1, n, m))
+        pfac, vfac = jax.vmap(self._compress_one)(
+            mat, jax.random.split(key, mat.shape[0]))
+        return Encoded(payload=(pfac, vfac), aux=(g.shape, spec),
+                       bits=math.prod(batch_shape) * self.rank * (n + m) * 32)
+
+    def decode_leaf(self, enc, payload):
+        shape, spec = enc.aux
+        pfac, vfac = payload
+        mat = jnp.einsum("bnr,bmr->bnm", pfac, vfac)
+        ms = matrixize.matrix_shape(shape, spec)
+        batch_shape, n, m = ms
+        return matrixize.from_matrix(
+            mat.reshape(batch_shape + (n, m)), shape, spec)
+
+    def _step_per_leaf(self, deltas, state, specs, ctx, key):
         bits = [0]
 
         def leaf(path, g, q, spec):
-            ms = matrixize.matrix_shape(g.shape, spec)
-            if ms is None:
+            enc = self.encode_leaf(path, g, q, spec, _leaf_key(key, path))
+            if enc is None:
                 bits[0] += matrixize.uncompressed_floats(g.shape) * 32
                 return ctx.pmean_data(g), g, None
-            batch_shape, n, m = ms
-            mat = matrixize.to_matrix(g, spec).reshape((-1, n, m))
-            k = _leaf_key(key, path)
-            recon = jax.vmap(self._compress_one)(mat, jax.random.split(k, mat.shape[0]))
-            recon = recon.reshape(g.shape)
-            agg = ctx.pmean_data(recon)
-            bits[0] += math.prod(batch_shape) * self.rank * (n + m) * 32
+            bits[0] += enc.bits
+            recon = self.decode_leaf(enc, enc.payload)
+            agg = ctx.pmean_data(recon)  # simulated gather (see _FlatSparsifier)
             return agg, recon, None
 
         return _map_leaves(leaf, deltas, deltas, specs, bits)
@@ -388,34 +539,56 @@ class ExactRankK(Compressor):
     """Best rank-r approximation via SVD of the *aggregated* gradient.
 
     bits_per_worker: ``32 · r · (n + m)`` per matrix — nominal; the oracle is
-    not actually communicable without first aggregating the dense gradient.
+    not actually communicable without first aggregating the dense gradient,
+    which is why its wire_mode is a dense *reduce* (decode runs after
+    aggregation — SVD of the mean, not mean of SVDs) and its recon is the
+    aggregated decode.
     """
 
     name = "exact_rank_k"
-    allreduce = False  # requires aggregating first (or gather); oracle only
+    allreduce = False  # the compressed repr is not linear; oracle only
+    recon_is_agg = True
 
-    def __init__(self, rank=2):
+    @property
+    def wire_mode(self):
+        return "reduce"  # dense gradient travels, decode after aggregation
+
+    def __init__(self, rank=2, **kw):
+        super().__init__(**kw)
         self.rank = rank
 
-    def step(self, deltas, state, specs, ctx=SINGLE, key=None):
+    def encode_leaf(self, path, g, q, spec, key):
+        ms = matrixize.matrix_shape(g.shape, spec)
+        if ms is None:
+            return None
+        batch_shape, n, m = ms
+        return Encoded(payload=(g,), aux=(g.shape, spec),
+                       bits=math.prod(batch_shape) * self.rank * (n + m) * 32)
+
+    def decode_leaf(self, enc, payload):
+        shape, spec = enc.aux
+        ms = matrixize.matrix_shape(shape, spec)
+        batch_shape, n, m = ms
+        mat = matrixize.to_matrix(payload[0], spec).reshape((-1, n, m))
+
+        def trunc(a):
+            u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+            s = s.at[self.rank:].set(0.0)
+            return jnp.einsum("nk,k,km->nm", u, s, vt)
+
+        recon = jax.vmap(trunc)(mat).reshape(batch_shape + (n, m))
+        return matrixize.from_matrix(recon, shape, spec)
+
+    def _step_per_leaf(self, deltas, state, specs, ctx, key):
         bits = [0]
 
         def leaf(path, g, q, spec):
-            ms = matrixize.matrix_shape(g.shape, spec)
-            if ms is None:
+            enc = self.encode_leaf(path, g, q, spec, None)
+            if enc is None:
                 bits[0] += matrixize.uncompressed_floats(g.shape) * 32
                 return ctx.pmean_data(g), g, None
-            batch_shape, n, m = ms
-            g_mean = ctx.pmean_data(g)
-            mat = matrixize.to_matrix(g_mean, spec).reshape((-1, n, m))
-
-            def trunc(a):
-                u, s, vt = jnp.linalg.svd(a, full_matrices=False)
-                s = s.at[self.rank:].set(0.0)
-                return jnp.einsum("nk,k,km->nm", u, s, vt)
-
-            recon = jax.vmap(trunc)(mat).reshape(g.shape)
-            bits[0] += math.prod(batch_shape) * self.rank * (n + m) * 32
+            bits[0] += enc.bits
+            recon = self.decode_leaf(enc, (ctx.pmean_data(g),))
             return recon, recon, None
 
         return _map_leaves(leaf, deltas, deltas, specs, bits)
@@ -423,20 +596,20 @@ class ExactRankK(Compressor):
 
 def make_compressor(name: str, rank: int = 2, **kw) -> Compressor:
     registry = {
-        "identity": lambda: IdentityCompressor(),
+        "identity": lambda: IdentityCompressor(**kw),
         "powersgd": lambda: PowerSGDCompressor(rank=rank, **kw),
         "powersgd_cold": lambda: PowerSGDCompressor(rank=rank, warm_start=False, **kw),
         "powersgd_best_approx": lambda: PowerSGDCompressor(
             rank=rank, warm_start=False, num_iters=4, **kw),
         "powersgd_per_leaf": lambda: PowerSGDCompressor(
             rank=rank, bucketing="off", **kw),
-        "unbiased_rank_k": lambda: UnbiasedRankK(rank=rank),
-        "random_block": lambda: RandomBlock(rank=rank),
-        "random_k": lambda: RandomK(rank=rank),
-        "sign_norm": lambda: SignNorm(rank=rank),
-        "top_k": lambda: TopK(rank=rank),
-        "spectral_atomo": lambda: SpectralAtomo(rank=rank),
-        "exact_rank_k": lambda: ExactRankK(rank=rank),
+        "unbiased_rank_k": lambda: UnbiasedRankK(rank=rank, **kw),
+        "random_block": lambda: RandomBlock(rank=rank, **kw),
+        "random_k": lambda: RandomK(rank=rank, **kw),
+        "sign_norm": lambda: SignNorm(rank=rank, **kw),
+        "top_k": lambda: TopK(rank=rank, **kw),
+        "spectral_atomo": lambda: SpectralAtomo(rank=rank, **kw),
+        "exact_rank_k": lambda: ExactRankK(rank=rank, **kw),
     }
     try:
         return registry[name]()

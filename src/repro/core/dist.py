@@ -44,34 +44,73 @@ class CollectiveStats:
     """Trace-time counter of *data-axis* collectives.
 
     Attach one to a :class:`MeshCtx` (``MeshCtx(..., stats=CollectiveStats())``)
-    and every ``psum_data`` / ``pmean_data`` / ``pmean_flat`` call records the
-    logical collective it issues — the count a real mesh would see.  Recording
-    happens at Python trace time, so counts are exact for an eagerly executed
-    step and count one trace for a jitted one.  Collectives that degenerate to
-    the identity (empty ``data_axes``) are still recorded: the *would-be*
-    communication pattern is what the benchmarks compare.
+    and every ``psum_data`` / ``pmean_data`` / ``pmean_flat`` /
+    ``allgather_flat`` call records the logical collective it issues — the
+    count a real mesh would see.  Recording happens at Python trace time, so
+    counts are exact for an eagerly executed step and count one trace for a
+    jitted one.  Collectives that degenerate to the identity (empty
+    ``data_axes``) are still recorded: the *would-be* communication pattern is
+    what the benchmarks compare.
+
+    Each record carries its transport ``kind``:
+
+    * ``"reduce"`` — all-reduce pattern (``psum``/``pmean``): every worker
+      contributes and receives ``size`` elements; traffic does not grow
+      with the number of workers W (the paper's §3 scalability argument).
+    * ``"gather"`` — all-gather pattern: every worker contributes ``size``
+      elements and *receives* ``fanout·size`` (fanout = W), so wire bytes
+      scale with the data-parallel world size.
+
+    ``itemsizes`` records the *actual* wire itemsize of each buffer (e.g. 2
+    for a bfloat16 chunk, 1 for int8 sign payloads) — not a blanket float32
+    assumption — so ``bytes_per_collective`` is honest about both the wire
+    dtype and the reduce-vs-gather scaling.
     """
 
     data_collectives: int = 0
     data_floats: int = 0
     sizes: List[int] = dataclasses.field(default_factory=list)
     itemsizes: List[int] = dataclasses.field(default_factory=list)
+    kinds: List[str] = dataclasses.field(default_factory=list)
+    fanouts: List[int] = dataclasses.field(default_factory=list)
 
-    def record(self, n_elems: int, itemsize: int = 4) -> None:
+    def record(self, n_elems: int, itemsize: int = 4, kind: str = "reduce",
+               fanout: int = 1) -> None:
+        assert kind in ("reduce", "gather"), kind
         self.data_collectives += 1
         self.data_floats += int(n_elems)
         self.sizes.append(int(n_elems))
         self.itemsizes.append(int(itemsize))
+        self.kinds.append(kind)
+        self.fanouts.append(int(fanout))
 
     def reset(self) -> None:
         self.data_collectives = 0
         self.data_floats = 0
         self.sizes.clear()
         self.itemsizes.clear()
+        self.kinds.clear()
+        self.fanouts.clear()
+
+    @property
+    def reduce_collectives(self) -> int:
+        return sum(1 for k in self.kinds if k == "reduce")
+
+    @property
+    def gather_collectives(self) -> int:
+        return sum(1 for k in self.kinds if k == "gather")
 
     def bytes_per_collective(self) -> List[int]:
-        """Wire bytes per collective, using each buffer's recorded dtype."""
-        return [s * i for s, i in zip(self.sizes, self.itemsizes)]
+        """Wire bytes per collective, using each buffer's recorded dtype.
+
+        Gather-pattern entries are scaled by their fanout (the data-parallel
+        world size W): each worker receives every other worker's payload, so
+        the bytes crossing a worker's NIC are W× the per-worker payload —
+        the cost the paper's all-reduce argument avoids.
+        """
+        return [s * i * (f if k == "gather" else 1)
+                for s, i, k, f in zip(self.sizes, self.itemsizes,
+                                      self.kinds, self.fanouts)]
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +186,25 @@ class AxisBackend(CollectiveBackend):
 AXIS = AxisBackend()  # stateless — one shared instance
 
 
+def weighted_mean(x, w, sum_fn):
+    """``Σ w·x / Σ w`` with a guarded denominator, generic over how the sum
+    is taken (``lax.psum`` over a named axis, ``jnp.sum`` over a stacked
+    worker dim).  The single home of the weighted-aggregation semantics:
+    :meth:`SimBackend.pmean` (wire-side weighting) and
+    :meth:`repro.core.engine.Transport.combine_mean` (receiver-side
+    weighting of gathered decodes) must stay exactly equal — the zoo
+    conformance suite compares them bit-for-bit.
+
+    The division happens in the weight dtype (f32): ``finfo.tiny`` would
+    underflow to 0 if cast to a low-precision wire dtype, turning the
+    all-dropped round into 0/0 = NaN instead of the documented exact zero.
+    """
+    total = sum_fn(w)
+    numer = sum_fn(x * w.astype(x.dtype))
+    denom = jnp.maximum(total, jnp.finfo(total.dtype).tiny)
+    return (numer.astype(total.dtype) / denom).astype(x.dtype)
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class SimBackend(AxisBackend):
     """W-logical-worker simulation backend (see :mod:`repro.core.simmesh`).
@@ -178,14 +236,7 @@ class SimBackend(AxisBackend):
     def pmean(self, x, axes):
         if self.weight is None:
             return lax.pmean(x, axes)
-        w = self.weight
-        total = lax.psum(w, axes)
-        numer = lax.psum(x * w.astype(x.dtype), axes)
-        # divide in the weight dtype (f32): finfo.tiny would underflow to 0
-        # if cast to a low-precision wire dtype, turning the all-dropped
-        # round into 0/0 = NaN instead of the documented exact zero
-        denom = jnp.maximum(total, jnp.finfo(total.dtype).tiny)
-        return (numer.astype(total.dtype) / denom).astype(x.dtype)
+        return weighted_mean(x, self.weight, lambda v: lax.psum(v, axes))
 
     def axis_size(self, axes) -> int:
         n = 1
@@ -222,9 +273,11 @@ class MeshCtx:
     backend: CollectiveBackend = dataclasses.field(
         default=AXIS, compare=False)
 
-    def _record_data(self, x) -> None:
+    def _record_data(self, x, kind: str = "reduce") -> None:
         if self.stats is not None:
-            self.stats.record(x.size, jnp.dtype(x.dtype).itemsize)
+            self.stats.record(
+                x.size, jnp.dtype(x.dtype).itemsize, kind=kind,
+                fanout=self.data_size() if kind == "gather" else 1)
 
     # -- data-parallel collectives (gradient aggregation) ------------------
     def psum_data(self, x):
@@ -235,33 +288,99 @@ class MeshCtx:
         self._record_data(x)
         return self.backend.pmean(x, self.data_axes) if self.data_axes else x
 
-    def pmean_flat(self, parts: Sequence[jax.Array]) -> List[jax.Array]:
-        """Fused all-reduce-mean: ONE collective for a whole list of arrays.
+    def pmean_flat(self, parts: Sequence[jax.Array], *,
+                   wire_dtype: str = "auto",
+                   max_chunk_bytes: Optional[int] = None) -> List[jax.Array]:
+        """Fused all-reduce-mean: O(1) collectives for a whole list of arrays.
 
-        Ravels every part, concatenates them into a single contiguous buffer
-        (in a common wire dtype), issues a single ``pmean`` over the data
-        axes, then splits the buffer back into the original shapes/dtypes.
+        Ravels every part, concatenates into contiguous wire buffers (one per
+        :class:`~repro.core.matrixize.FlatChunk` — see
+        :func:`repro.core.matrixize.plan_flat` for the ``wire_dtype`` /
+        ``max_chunk_bytes`` chunking policy), issues one ``pmean`` per chunk
+        over the data axes, then splits back into the original shapes/dtypes.
         Because ``pmean`` is elementwise, this is numerically identical to
-        per-part ``pmean_data`` calls (up to the wire-dtype cast) while
-        replacing N latency-bound collectives with one bandwidth-bound one —
-        the communication model of the bucketed PowerSGD engine.
+        per-part ``pmean_data`` calls (bit-identical when no wire cast
+        applies) while replacing N latency-bound collectives with one
+        bandwidth-bound one per chunk.
+
+        ``wire_dtype="auto"`` keeps each part's own dtype (same-dtype parts
+        share a chunk) — a mixed tree no longer silently upcasts a bfloat16
+        payload because one float32 straggler rode along.  Each chunk's
+        *actual* wire itemsize is recorded in :class:`CollectiveStats`.
         """
+        from repro.core import matrixize  # local: dist must stay import-light
+
         parts = list(parts)
         if not parts:
             return []
-        wire = jnp.result_type(*parts)
-        flats = [jnp.ravel(p).astype(wire) for p in parts]
-        buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
-        self._record_data(buf)
-        if self.data_axes:
-            buf = self.backend.pmean(buf, self.data_axes)
-        out, off = [], 0
-        for p in parts:
-            out.append(
-                lax.slice_in_dim(buf, off, off + p.size, axis=0)
-                .reshape(p.shape).astype(p.dtype))
-            off += p.size
-        return out
+        plan = matrixize.plan_flat(parts, wire_dtype=wire_dtype,
+                                   max_chunk_bytes=max_chunk_bytes)
+        out: dict = {}
+        for chunk in plan.chunks:
+            buf = matrixize.pack_flat(chunk, parts)
+            self._record_data(buf)
+            if self.data_axes:
+                buf = self.backend.pmean(buf, self.data_axes)
+            out.update(matrixize.unpack_flat(chunk, buf))
+        return [out[i] for i in range(len(parts))]
+
+    def allgather_flat(self, parts: Sequence[jax.Array], *,
+                       wire_dtype: str = "auto",
+                       max_chunk_bytes: Optional[int] = None) -> List[jax.Array]:
+        """Fused all-gather: O(1) collectives for a whole list of arrays.
+
+        The gather-pattern sibling of :meth:`pmean_flat`, for compressed
+        representations that are *not* linear (sign, top-K, sampled SVD
+        triplets): the payloads themselves cannot be summed on the wire, so
+        every worker must see every other worker's payload and decode all W
+        of them.  Parts are fused into wire chunks exactly like
+        :meth:`pmean_flat`; each chunk is gathered with ONE ``all_gather``
+        over the data axes and each part comes back with a leading
+        worker dimension of size ``data_size()`` (size 1 outside any data
+        axis — same code path single-device and distributed).
+
+        :class:`CollectiveStats` records these with ``kind="gather"`` and
+        ``fanout=data_size()`` so ``bytes_per_collective`` reflects the
+        W-scaled traffic — the cost the paper's all-reduce argument avoids.
+        """
+        from repro.core import matrixize
+
+        parts = list(parts)
+        if not parts:
+            return []
+        plan = matrixize.plan_flat(parts, wire_dtype=wire_dtype,
+                                   max_chunk_bytes=max_chunk_bytes)
+        w = self.data_size()
+        out: dict = {}
+        for chunk in plan.chunks:
+            buf = matrixize.pack_flat(chunk, parts)
+            self._record_data(buf, kind="gather")
+            if self.data_axes:
+                buf = self.backend.all_gather(buf, self.data_axes,
+                                              gather_axis=0, tiled=False)
+            else:
+                buf = buf[None]
+            out.update(matrixize.unpack_flat(chunk, buf, leading=(w,)))
+        return [out[i] for i in range(len(parts))]
+
+    def gather_data_weight(self) -> Optional[jax.Array]:
+        """All workers' contribution weights as a ``(data_size(),)`` vector,
+        or ``None`` when the backend carries no per-worker weight (uniform).
+
+        Gather-pattern aggregation averages *decoded* payloads on the
+        receiver, so scenario weights (worker dropout, heterogeneous
+        batches — :class:`SimBackend`) must travel with the payloads; the
+        transport engine uses this to weight its combine step exactly like
+        a weighted ``pmean``.
+        """
+        weight = getattr(self.backend, "weight", None)
+        if weight is None:
+            return None
+        w = jnp.reshape(weight, ())
+        if not self.data_axes:
+            return w[None]
+        return self.backend.all_gather(w[None], self.data_axes,
+                                       gather_axis=0, tiled=True)
 
     # -- model-parallel collectives (tensor parallelism) --------------------
     def psum_model(self, x):

@@ -1,0 +1,368 @@
+"""Unified compressed-collective transport engine.
+
+The paper's central systems claim (§3) is about *how compressed payloads
+travel*: linear schemes can all-reduce their compressed representation
+directly, non-linear schemes must all-gather every worker's payload and pay
+W-scaled decode + traffic.  This module is the one place that logic lives —
+every compressor in the zoo rides it, so each scheme costs O(1) fused
+data-axis collectives per step instead of one latency-bound collective per
+parameter leaf.
+
+Three layers, bottom-up:
+
+* :class:`Transport` — fused data-axis collectives bound to a
+  :class:`~repro.core.dist.MeshCtx` and a wire policy (``wire_dtype``,
+  ``max_chunk_bytes``; see :func:`repro.core.matrixize.plan_flat`).
+  ``reduce_mean`` is the all-reduce path (linear payloads), ``gather`` the
+  all-gather path (non-linear payloads; payloads come back with a leading
+  worker dim), and ``combine_mean`` the receiver-side weighted average over
+  gathered decodes — exactly a weighted ``pmean``, including the
+  guarded-denominator semantics of :class:`~repro.core.dist.SimBackend`.
+
+* :class:`MatrixPayloads` — the batched *compute* plan for matrix-shaped
+  schemes (PowerSGD): collect a tree's leaves, matrixize the compressed
+  ones, bucket them into zero-padded ``(B, n, m)`` slabs
+  (:func:`repro.core.matrixize.plan_buckets`), and scatter results back to
+  the tree.  ``core/powersgd.py`` is pure math (project / orthogonalize /
+  backproject) against this plan plus a :class:`Transport`.
+
+* :func:`run_step` — the generic driver for single-round payload schemes.
+  A compressor declares *what travels* through the protocol below; the
+  engine decides *how it travels* from ``wire_mode``:
+
+  ==============  =====================================================
+  ``wire_mode``   transport
+  ==============  =====================================================
+  ``"reduce"``    payloads fused + all-reduced; ``decode_leaf`` runs once
+                  on the aggregated payload (linearity: decode∘mean =
+                  mean∘decode)
+  ``"gather"``    payloads fused + all-gathered; ``decode_leaf`` runs per
+                  worker payload and the W reconstructions are
+                  weight-averaged on the receiver
+  ==============  =====================================================
+
+  Uncompressed leaves (biases, norms) always ride a fused all-reduce.
+
+Compressor protocol (duck-typed; see ``core/compressors.py``)::
+
+    encode_leaf(path, g, q, spec, key) -> Encoded | None   # None = uncompressed
+    decode_leaf(enc, payload)          -> reconstruction (full tensor shape)
+    wire_mode:    "reduce" | "gather"
+    recon_is_agg: bool  # error-feedback recon = aggregated decode (oracles)
+
+``CollectiveStats`` sees the difference: reduce-pattern records stay flat in
+W, gather-pattern records carry ``fanout = data_size()`` so
+``bytes_per_collective`` reports the W-scaled wire traffic — the honest
+accounting the benchmarks compare (mis-modeling exactly this flips
+conclusions; Agarwal et al., "On the Utility of Gradient Compression").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dist, matrixize
+from repro.core.dist import MeshCtx, SINGLE
+
+
+@dataclasses.dataclass
+class CompressOut:
+    """What one compress+aggregate step hands back to error feedback."""
+
+    agg: Any            # tree: aggregated decompressed update (= mean_w Δ'_w)
+    recon: Any          # tree: reconstruction used for the error update
+    state: Any          # tree: new compressor state (e.g. warm-start Q)
+    bits_per_worker: int  # payload bits sent per step per model shard
+
+
+def leaf_key(key: jax.Array, path) -> jax.Array:
+    """Deterministic per-leaf PRNG key: shared-seed schemes rely on every
+    worker deriving the same key from the same tree path."""
+    h = hashlib.sha256(jax.tree_util.keystr(path).encode()).digest()
+    return jax.random.fold_in(key, int.from_bytes(h[:4], "little"))
+
+
+@dataclasses.dataclass(frozen=True)
+class Encoded:
+    """One leaf's wire declaration: ``payload`` travels, ``aux`` stays local
+    (shared-seed indices, sampling matrices), ``bits`` is the analytic
+    payload size (paper Tables 3/10/11 conventions)."""
+
+    payload: Tuple[jax.Array, ...]
+    aux: Any = None
+    bits: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "payload", tuple(self.payload))
+
+
+# ---------------------------------------------------------------------------
+# Transport: fused data-axis collectives + receiver-side combine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """Fused data-axis transport bound to a context and a wire policy."""
+
+    ctx: MeshCtx = SINGLE
+    wire_dtype: str = "auto"            # "auto" | "float32" | "bfloat16"
+    max_chunk_bytes: Optional[int] = None
+
+    def reduce_mean(self, parts: Sequence[jax.Array]) -> List[jax.Array]:
+        """Fused all-reduce-mean (O(1) collectives; linear payloads)."""
+        return self.ctx.pmean_flat(parts, wire_dtype=self.wire_dtype,
+                                   max_chunk_bytes=self.max_chunk_bytes)
+
+    def gather(self, parts: Sequence[jax.Array]) -> List[jax.Array]:
+        """Fused all-gather (O(1) collectives; non-linear payloads).  Every
+        part returns with a leading worker dim of ``ctx.data_size()``."""
+        return self.ctx.allgather_flat(parts, wire_dtype=self.wire_dtype,
+                                       max_chunk_bytes=self.max_chunk_bytes)
+
+    def combine_mean(self, stacked: jax.Array,
+                     weights: Optional[jax.Array]) -> jax.Array:
+        """Average W per-worker decodes over the leading gathered dim:
+        ``mean_w`` (uniform) or the shared weighted-``pmean`` semantics of
+        :func:`repro.core.dist.weighted_mean` (all-dropped round → exact
+        zero, not NaN)."""
+        if weights is None:
+            return jnp.mean(stacked, axis=0)
+        w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1))
+        return dist.weighted_mean(stacked, w, lambda v: jnp.sum(v, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# tree walking shared by every engine path
+# ---------------------------------------------------------------------------
+
+
+def collect_leaves(deltas, state, specs) -> list:
+    """Flatten aligned (path, g, q, spec) tuples in deterministic tree order.
+
+    ``state`` may be ``None`` (stateless schemes): every leaf then gets
+    ``q=None``.
+    """
+    leaves = []
+
+    def visit(path, g, q, spec):
+        leaves.append((path, g, q, spec))
+        return 0
+
+    if state is None:
+        jax.tree_util.tree_map_with_path(
+            lambda path, g, spec: visit(path, g, None, spec), deltas, specs,
+            is_leaf=lambda x: x is None)
+    else:
+        jax.tree_util.tree_map_with_path(
+            visit, deltas, state, specs, is_leaf=lambda x: x is None)
+    return leaves
+
+
+def scatter_tree(deltas, specs, results, collapse_state: bool = True):
+    """Re-assemble per-leaf ``(agg, recon, new_state)`` triples (in the same
+    order as :func:`collect_leaves`) into three trees shaped like ``deltas``.
+    ``collapse_state`` folds an all-``None`` state tree to a bare ``None``
+    (stateless schemes); stateful schemes keep the per-leaf tree so their
+    state layout round-trips exactly."""
+    counter = [0]
+
+    def emit(path, g, spec):
+        out = results[counter[0]]
+        counter[0] += 1
+        return out
+
+    triples = jax.tree_util.tree_map_with_path(
+        emit, deltas, specs, is_leaf=lambda x: x is None)
+    is_t = lambda x: isinstance(x, tuple)
+    agg = jax.tree_util.tree_map(lambda t: t[0], triples, is_leaf=is_t)
+    recon = jax.tree_util.tree_map(lambda t: t[1], triples, is_leaf=is_t)
+    state = jax.tree_util.tree_map(lambda t: t[2], triples, is_leaf=is_t)
+    if collapse_state and not jax.tree_util.tree_leaves(state):
+        state = None
+    return agg, recon, state
+
+
+# ---------------------------------------------------------------------------
+# generic single-round driver (the whole zoo except PowerSGD's 2-phase loop)
+# ---------------------------------------------------------------------------
+
+
+def run_step(comp, deltas, state, specs, ctx: MeshCtx = SINGLE,
+             key: Optional[jax.Array] = None, *, wire_dtype: str = "auto",
+             max_chunk_bytes: Optional[int] = None) -> CompressOut:
+    """One compress+aggregate step through the fused transport engine.
+
+    Collects the tree's leaves, asks the compressor to encode each one,
+    fuses all payloads into O(1) collectives (reduce or gather per
+    ``comp.wire_mode``), decodes, and scatters back to the tree.  Vector
+    leaves the scheme leaves uncompressed (``encode_leaf → None``) ride a
+    fused all-reduce — for gather schemes that is one extra reduce next to
+    the payload gather.
+    """
+    assert not comp.stateful, (
+        f"{comp.name}: run_step drives stateless single-round schemes; "
+        "stateful multi-round schemes (PowerSGD) schedule their own "
+        "Transport phases")
+    transport = Transport(ctx=ctx, wire_dtype=wire_dtype,
+                          max_chunk_bytes=max_chunk_bytes)
+    leaves = collect_leaves(deltas, state, specs)
+
+    encs, bits = [], 0
+    for path, g, q, spec in leaves:
+        enc = comp.encode_leaf(path, g, q, spec,
+                               leaf_key(key, path) if key is not None else None)
+        assert enc is None or isinstance(enc, Encoded), comp.name
+        encs.append(enc)
+        bits += (matrixize.uncompressed_floats(g.shape) * 32 if enc is None
+                 else enc.bits)
+
+    unc_ids = [i for i, e in enumerate(encs) if e is None]
+    enc_ids = [i for i, e in enumerate(encs) if e is not None]
+    payload_parts, payload_slices = [], {}
+    for i in enc_ids:
+        payload_slices[i] = (len(payload_parts),
+                             len(payload_parts) + len(encs[i].payload))
+        payload_parts.extend(encs[i].payload)
+
+    results: dict = {}
+    if comp.wire_mode == "reduce":
+        # one fused pass: payloads + uncompressed leaves share the wire
+        reduced = transport.reduce_mean(
+            payload_parts + [leaves[i][1] for i in unc_ids])
+        for i in enc_ids:
+            lo, hi = payload_slices[i]
+            agg = comp.decode_leaf(encs[i], tuple(reduced[lo:hi]))
+            recon = agg if comp.recon_is_agg else (
+                comp.decode_leaf(encs[i], encs[i].payload))
+            results[i] = (agg, recon, None)
+        for j, i in enumerate(unc_ids):
+            results[i] = (reduced[len(payload_parts) + j], leaves[i][1], None)
+    elif comp.wire_mode == "gather":
+        unc_agg = transport.reduce_mean([leaves[i][1] for i in unc_ids])
+        for j, i in enumerate(unc_ids):
+            results[i] = (unc_agg[j], leaves[i][1], None)
+        gathered = transport.gather(payload_parts)   # each: (W,) + shape
+        weights = ctx.gather_data_weight()
+        for i in enc_ids:
+            lo, hi = payload_slices[i]
+            decode_w = jax.vmap(
+                lambda *p, _e=encs[i]: comp.decode_leaf(_e, tuple(p)))
+            decoded = decode_w(*gathered[lo:hi])     # (W,) + leaf shape
+            agg = transport.combine_mean(decoded, weights)
+            recon = agg if comp.recon_is_agg else (
+                comp.decode_leaf(encs[i], encs[i].payload))
+            results[i] = (agg, recon, None)
+    else:
+        raise ValueError(f"unknown wire_mode {comp.wire_mode!r} on {comp.name}")
+
+    agg, recon, new_state = scatter_tree(
+        deltas, specs, [results[i] for i in range(len(leaves))])
+    return CompressOut(agg=agg, recon=recon, state=new_state,
+                       bits_per_worker=bits)
+
+
+# ---------------------------------------------------------------------------
+# MatrixPayloads: the bucketed pack/scatter plan for matrix-shaped schemes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MatrixPayloads:
+    """A tree's compressed leaves as zero-padded ``(B, n, m)`` bucket slabs.
+
+    This is the pack/fuse/scatter machinery the bucketed PowerSGD engine
+    used to carry inline: collect leaves, matrixize, plan shape buckets,
+    stack the slabs (and warm-start factor slabs), and — after the caller
+    has run whatever batched math + :class:`Transport` phases it wants on
+    the slabs — crop and scatter results back to the original tree.  Zero
+    padding is exact through the power-iteration math (see
+    ``core/matrixize.py``).
+    """
+
+    deltas: Any                      # the original tree (structure template)
+    specs: Any
+    leaves: list                     # (path, g, q, spec) in tree order
+    plan: matrixize.BucketPlan
+    m_bufs: List[jax.Array]          # per bucket: (B, n, m) matrix slab
+    q_bufs: List[jax.Array]          # per bucket: (B, m, r) factor slab
+    lshapes: list                    # per leaf: (batch_shape, n, m) or None
+    unc_ids: List[int]               # leaves that travel uncompressed
+    rank: int
+    bits: int                        # analytic payload bits per worker
+
+    @classmethod
+    def build(cls, deltas, state, specs, *, rank: int, dtype,
+              tolerance: float = 0.25,
+              resample_key: Optional[jax.Array] = None) -> "MatrixPayloads":
+        """``resample_key`` replaces every warm-start factor with a fresh
+        i.i.d. normal draw (cold start), derived per leaf via
+        :func:`leaf_key`."""
+        leaves = collect_leaves(deltas, state, specs)
+        mats, qs, plan_shapes, lshapes, unc_ids = [], [], [], [], []
+        floats = 0
+        for i, (path, g, q, spec) in enumerate(leaves):
+            ms = matrixize.matrix_shape(g.shape, spec) if q is not None else None
+            if ms is None:
+                mats.append(None)
+                qs.append(None)
+                plan_shapes.append(None)
+                lshapes.append(None)
+                unc_ids.append(i)
+                floats += matrixize.uncompressed_floats(g.shape)
+                continue
+            batch_shape, n, m = ms
+            count = math.prod(batch_shape) if batch_shape else 1
+            mats.append(matrixize.to_matrix(g, spec)
+                        .astype(dtype).reshape((count, n, m)))
+            if resample_key is not None:
+                q = jax.random.normal(leaf_key(resample_key, path), q.shape,
+                                      dtype=dtype)
+            qs.append(q.astype(dtype).reshape((count, m, rank)))
+            plan_shapes.append((count, n, m))
+            lshapes.append((batch_shape, n, m))
+            floats += matrixize.compressed_floats(g.shape, spec, rank)
+
+        plan = matrixize.plan_buckets(plan_shapes, tolerance=tolerance)
+        return cls(
+            deltas=deltas, specs=specs, leaves=leaves, plan=plan,
+            m_bufs=[matrixize.pack_matrices(b, mats) for b in plan.buckets],
+            q_bufs=[matrixize.pack_factors(b, qs) for b in plan.buckets],
+            lshapes=lshapes, unc_ids=unc_ids, rank=rank, bits=floats * 32)
+
+    @property
+    def unc_values(self) -> List[jax.Array]:
+        """The uncompressed leaves' raw tensors (ride the first fused
+        reduce)."""
+        return [self.leaves[i][1] for i in self.unc_ids]
+
+    def scatter(self, agg_bufs, recon_bufs, q_bufs, unc_agg):
+        """Crop per-leaf blocks back out of the bucket slabs and emit the
+        (agg, recon, state) trees.  ``unc_agg`` is aligned with
+        ``unc_ids``."""
+        unc_by_id = dict(zip(self.unc_ids, unc_agg))
+        results = []
+        for i, (path, g, q, spec) in enumerate(self.leaves):
+            if self.lshapes[i] is None:
+                results.append((unc_by_id[i], g, None))
+                continue
+            batch_shape, n, m = self.lshapes[i]
+            b_id, entry = self.plan.entry_for(i)
+
+            def crop(buf):
+                mat = matrixize.unpack_entry(buf, entry, n, m)
+                mat = mat.reshape(batch_shape + (n, m))
+                return matrixize.from_matrix(mat, g.shape, spec).astype(g.dtype)
+
+            new_q = matrixize.unpack_entry(q_bufs[b_id], entry, m)
+            new_q = new_q.reshape(batch_shape + (m, self.rank))
+            results.append((crop(agg_bufs[b_id]), crop(recon_bufs[b_id]),
+                            new_q))
+        return scatter_tree(self.deltas, self.specs, results,
+                            collapse_state=False)

@@ -7,6 +7,15 @@
     m     ← λ m + Δ'
     x     ← x − γ (Δ' + m)
 
+``start_compress_step`` delays compression, as in the PyTorch DDP PowerSGD
+hook: for the first k steps the deltas are aggregated *dense* (one fused
+flat all-reduce through the transport engine) and the reconstruction is the
+delta itself, so the error buffers stay exactly zero and the trajectory is
+bit-identical to the identity compressor's.  Compression — and error
+feedback — kick in at step k against gradients whose statistics have
+stabilised, which is what makes warm-started low-rank compression safe at
+the very start of training.
+
 The error buffer ``e_w`` is per-worker state: in the distributed train step it
 is carried with a leading data-parallel dim sharded over the data axes, so
 each rank owns a distinct buffer.  This module itself is shape-agnostic — it
@@ -31,7 +40,9 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro.core import matrixize
 from repro.core.compressors import Compressor
 from repro.core.dist import MeshCtx, SINGLE
 
@@ -73,8 +84,13 @@ def apply_updates(
     ctx: MeshCtx = SINGLE,
     key: Optional[jax.Array] = None,
     use_pallas_apply: bool = False,
+    start_compress_step: int = 0,
 ):
-    """One EF-SGD step.  Returns (new_params, new_state, aux)."""
+    """One EF-SGD step.  Returns (new_params, new_state, aux).
+
+    ``start_compress_step=k`` aggregates the first k steps dense (see module
+    docstring); with the default 0 every step compresses.
+    """
     if key is not None:
         key = jax.random.fold_in(key, state.step)
 
@@ -86,7 +102,11 @@ def apply_updates(
     # Δ_w = g_w + e_w
     deltas = jax.tree_util.tree_map(jnp.add, grads, state.error)
 
-    out = compressor.step(deltas, state.comp, specs, ctx=ctx, key=key)
+    if start_compress_step:
+        out = _warmup_or_compress(compressor, deltas, state.comp, specs,
+                                  ctx, key, state.step, start_compress_step)
+    else:
+        out = compressor.step(deltas, state.comp, specs, ctx=ctx, key=key)
 
     # e_w = Δ_w − recon
     new_error = jax.tree_util.tree_map(jnp.subtract, deltas, out.recon)
@@ -111,3 +131,47 @@ def apply_updates(
     )
     aux = {"bits_per_worker": out.bits_per_worker}
     return new_params, new_state, aux
+
+
+def _warmup_or_compress(compressor, deltas, comp_state, specs, ctx, key,
+                        step, k):
+    """Dense fused all-reduce for ``step < k``, the compressor afterwards.
+
+    Both branches run under ``lax.cond`` (a jittable, traced-step-compatible
+    switch), so the compressor's state must pass through the dense branch
+    unchanged — which it does by construction: warm-start factors only start
+    evolving once compression starts.  The dense reconstruction is the delta
+    itself, keeping the error buffers exactly zero through the warmup.
+
+    Note for :class:`~repro.core.dist.CollectiveStats` users: recording is
+    trace-time, and ``cond`` traces both branches, so a warmup-enabled step
+    records the dense collective *and* the compressor's — gate on
+    ``start_compress_step=0`` when asserting collective budgets.
+    """
+    from repro.core.engine import CompressOut
+
+    wire_dtype = getattr(compressor, "wire_dtype", "auto")
+    max_chunk = getattr(compressor, "max_chunk_bytes", None)
+    dense_bits = sum(matrixize.uncompressed_floats(g.shape) * 32
+                     for g in jax.tree_util.tree_leaves(deltas))
+    comp_bits = [dense_bits]
+
+    def dense(args):
+        deltas, comp_state = args
+        leaves, treedef = jax.tree_util.tree_flatten(deltas)
+        agg = jax.tree_util.tree_unflatten(
+            treedef, ctx.pmean_flat(leaves, wire_dtype=wire_dtype,
+                                    max_chunk_bytes=max_chunk))
+        return agg, deltas, comp_state
+
+    def compress(args):
+        deltas, comp_state = args
+        out = compressor.step(deltas, comp_state, specs, ctx=ctx, key=key)
+        comp_bits[0] = out.bits_per_worker  # captured at trace time
+        return out.agg, out.recon, out.state
+
+    agg, recon, new_comp = lax.cond(
+        step < k, dense, compress, (deltas, comp_state))
+    bits = jnp.where(step < k, dense_bits, comp_bits[0])
+    return CompressOut(agg=agg, recon=recon, state=new_comp,
+                       bits_per_worker=bits)

@@ -215,6 +215,119 @@ def unpack_entry(stacked: jax.Array, entry: BucketEntry,
     return x if cols is None else x[:, :, :cols]
 
 
+# ---------------------------------------------------------------------------
+# Flat-payload planning (the transport engine's fused-buffer stage)
+# ---------------------------------------------------------------------------
+#
+# Matrix slabs (above) batch the *compute*; flat plans batch the *wire*.  A
+# FlatPlan maps an ordered list of payload arrays — P/Q factor slabs, sparse
+# value/index vectors, sign buffers, uncompressed bias leaves — onto one or
+# more contiguous 1-D wire buffers ("chunks").  Chunking policy:
+#
+# * ``wire_dtype="auto"``  — parts keep their own dtype; parts of the same
+#   dtype share a chunk (in input order).  This deliberately replaces the
+#   old ``jnp.result_type(*parts)`` behaviour, where a single float32
+#   straggler silently upcast an entire bfloat16 payload on the wire.
+# * ``wire_dtype="float32"|"bfloat16"`` — every part is cast to that dtype
+#   for transport (and cast back on unpack), one shared chunk.
+# * ``max_chunk_bytes`` — optional cap; a chunk is split once its wire size
+#   would exceed the cap (a part never spans two chunks).
+#
+# Planning is pure Python over static shapes/dtypes — trace-time only.
+
+
+WIRE_DTYPES = ("auto", "float32", "bfloat16")
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSlot:
+    """One payload array's position inside a flat wire chunk."""
+
+    index: int                 # position in the planner's input sequence
+    offset: int                # first element inside the chunk buffer
+    size: int                  # number of elements
+    shape: Tuple[int, ...]     # original shape (restored on unpack)
+    dtype: "jnp.dtype"         # original dtype (restored on unpack)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatChunk:
+    """One contiguous wire buffer: same wire dtype, issued as one collective."""
+
+    wire_dtype: "jnp.dtype"
+    slots: Tuple[FlatSlot, ...]
+
+    @property
+    def size(self) -> int:
+        return sum(s.size for s in self.slots)
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.size * jnp.dtype(self.wire_dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatPlan:
+    chunks: Tuple[FlatChunk, ...]
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(c.wire_bytes for c in self.chunks)
+
+
+def plan_flat(parts, wire_dtype: str = "auto",
+              max_chunk_bytes: Optional[int] = None) -> FlatPlan:
+    """Plan the fused wire layout for an ordered sequence of arrays.
+
+    ``parts`` needs only ``.shape`` and ``.dtype`` (arrays or
+    ShapeDtypeStructs).  Returns a deterministic :class:`FlatPlan`: chunk
+    order follows first appearance of each wire dtype, slots follow input
+    order.  See the module comment for the chunking policy.
+    """
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"unknown wire_dtype {wire_dtype!r}; use one of {WIRE_DTYPES}")
+    cast = None if wire_dtype == "auto" else jnp.dtype(wire_dtype)
+    chunks: list = []          # [wire_dtype, offset, [FlatSlot]]
+    by_dtype: dict = {}        # wire dtype -> open chunk (last of its dtype)
+    for i, p in enumerate(parts):
+        wd = cast if cast is not None else jnp.dtype(p.dtype)
+        size = math.prod(p.shape) if p.shape else 1
+        open_chunk = by_dtype.get(wd)
+        if open_chunk is not None and max_chunk_bytes is not None:
+            if (open_chunk[1] + size) * wd.itemsize > max_chunk_bytes:
+                open_chunk = None  # cap reached: start a fresh chunk
+        if open_chunk is None:
+            open_chunk = [wd, 0, []]
+            chunks.append(open_chunk)
+            by_dtype[wd] = open_chunk
+        open_chunk[2].append(FlatSlot(
+            index=i, offset=open_chunk[1], size=size,
+            shape=tuple(p.shape), dtype=jnp.dtype(p.dtype)))
+        open_chunk[1] += size
+    return FlatPlan(chunks=tuple(
+        FlatChunk(wire_dtype=wd, slots=tuple(slots))
+        for wd, _, slots in chunks))
+
+
+def pack_flat(chunk: FlatChunk, parts) -> jax.Array:
+    """Concatenate the chunk's slots (indexable ``parts``) into its 1-D wire
+    buffer, casting to the wire dtype."""
+    flats = [jnp.ravel(parts[s.index]).astype(chunk.wire_dtype)
+             for s in chunk.slots]
+    return flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+
+
+def unpack_flat(chunk: FlatChunk, buf: jax.Array, leading=()) -> dict:
+    """Split a (possibly gathered: ``leading=(W,)``) wire buffer back into
+    ``{slot.index: array}`` with original shapes/dtypes restored."""
+    out = {}
+    for s in chunk.slots:
+        x = jax.lax.slice_in_dim(buf, s.offset, s.offset + s.size, axis=-1)
+        out[s.index] = x.reshape(tuple(leading) + s.shape).astype(s.dtype)
+    return out
+
+
 def compressed_floats(shape: Tuple[int, ...], spec: MatrixSpec, rank: int) -> int:
     """Number of floats sent per all-reduce for this leaf at rank r
     (the P and Q messages together: r·(n+m) per matrix in the batch)."""

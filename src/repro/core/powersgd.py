@@ -25,40 +25,48 @@ in-process W-worker simulator (:mod:`repro.core.simmesh`), where the
 worker axis; ``tests/sim/`` replays Lemma 3 and the collective-count
 invariant on that substrate.
 
-Bucketed batched-compression engine (default, ``bucketing="auto"``)
+Bucketed batched-compression via the transport engine (default,
+``bucketing="auto"``)
 -------------------------------------------------------------------
 The per-leaf schedule above issues two collectives *per weight matrix* —
 dozens of tiny latency-bound ``pmean``s per step, exactly the pattern the
-paper's all-reduce argument is meant to avoid.  The bucketed engine instead:
+paper's all-reduce argument is meant to avoid.  The default path instead
+runs the power iteration against :mod:`repro.core.engine`:
 
-1. groups the tree's matrixized leaves into shape buckets (zero-padding
-   within a tolerance; see :func:`repro.core.matrixize.plan_buckets`),
-2. stacks each bucket into a ``(B, n, m)`` slab and runs the whole power
-   iteration — project, orthogonalize, back-project — as batched ops,
-3. concatenates ALL buckets' P factors (plus the uncompressed vector
-   leaves) into one flat buffer and issues a single ``pmean`` via
-   :meth:`MeshCtx.pmean_flat`; likewise for the Q factors.
+1. :class:`~repro.core.engine.MatrixPayloads` groups the tree's matrixized
+   leaves into shape buckets (zero-padding within a tolerance; see
+   :func:`repro.core.matrixize.plan_buckets`) and stacks each bucket into a
+   ``(B, n, m)`` slab,
+2. this module runs the *math* — project, orthogonalize, back-project — as
+   batched ops over the slabs,
+3. :class:`~repro.core.engine.Transport` fuses ALL buckets' P factors (plus
+   the uncompressed vector leaves) into one flat wire buffer and issues a
+   single ``pmean``; likewise for the Q factors, honoring the configured
+   ``wire_dtype`` policy.
 
 One step therefore issues exactly 2 data-axis collectives per power
 iteration, independent of the number of weight matrices.  Zero padding is
 exact (padded rows/cols contribute exact zeros through both matmuls and the
 orthogonalizer), so the engine is numerically identical to the per-leaf path
-(``bucketing="off"``) up to float reassociation and the wire-dtype cast.
+(``bucketing="off"``) up to float reassociation and any wire-dtype cast.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import hashlib
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import matrixize
+from repro.core import engine, matrixize
 from repro.core.dist import MeshCtx, SINGLE
 from repro.core.orthogonalize import get_orthogonalizer
+
+# canonical homes moved to the transport engine; re-exported for existing
+# importers (compressors, tests)
+PowerSGDOut = engine.CompressOut
+_leaf_key = engine.leaf_key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,19 +80,8 @@ class PowerSGDConfig:
     dtype: Any = jnp.float32
     bucketing: str = "auto"                # "auto"/"on" = batched engine | "off" = per-leaf
     bucket_pad_tolerance: float = 0.25     # max relative padding waste per bucket
-
-
-@dataclasses.dataclass
-class PowerSGDOut:
-    agg: Any            # tree: aggregated decompressed update  (= mean_w Δ'_w)
-    recon: Any          # tree: reconstruction used for the error update
-    state: Any          # tree: new Q factors (warm start)
-    bits_per_worker: int  # floats all-reduced per step per model shard
-
-
-def _leaf_key(key: jax.Array, path) -> jax.Array:
-    h = hashlib.sha256(jax.tree_util.keystr(path).encode()).digest()
-    return jax.random.fold_in(key, int.from_bytes(h[:4], "little"))
+    wire_dtype: str = "auto"               # fused-collective wire policy ("auto"|"float32"|"bfloat16")
+    max_chunk_bytes: Optional[int] = None  # cap per fused wire buffer
 
 
 def init_state(cfg: PowerSGDConfig, shapes, specs, key: jax.Array):
@@ -181,70 +178,41 @@ def _compress_aggregate_bucketed(
 ) -> PowerSGDOut:
     """Batched power iteration over shape buckets, 2 collectives per iter.
 
-    Same math as the per-leaf path (see module docstring): leaves are
-    matrixized, stacked into zero-padded (B, n, m) bucket slabs, the whole
-    bucket is projected / orthogonalized / back-projected at once, and the
-    per-phase all-reduces are fused into one flat collective each via
-    ``ctx.pmean_flat``.  Uncompressed (vector) leaves ride along in the first
-    flat collective.  State layout is identical to the per-leaf path (per-leaf
-    Q factors), so the two paths are freely interchangeable mid-run.
+    Same math as the per-leaf path (see module docstring).  Pack / fuse /
+    scatter is the transport engine's job (:class:`engine.MatrixPayloads`
+    plans and packs the bucket slabs, :class:`engine.Transport` fuses the
+    per-phase all-reduces into one flat wire collective each); this function
+    is only the PowerSGD math — project, orthogonalize, back-project —
+    scheduled between the two transport phases.  Uncompressed (vector)
+    leaves ride along in the first fused collective.  State layout is
+    identical to the per-leaf path (per-leaf Q factors), so the two paths
+    are freely interchangeable mid-run.
     """
     orth = get_orthogonalizer(cfg.orthogonalizer)
     project, backproject = _matmuls(cfg)
     n_iter = max(1, cfg.num_iters)
 
-    # -- collect leaves in deterministic tree order -------------------------
-    leaves = []  # (path, g, q, spec)
-
-    def collect(path, g, q, spec):
-        leaves.append((path, g, q, spec))
-        return 0
-
-    jax.tree_util.tree_map_with_path(
-        collect, deltas, state, specs, is_leaf=lambda x: x is None)
-
-    mats, qs, plan_shapes, lshapes = [], [], [], []
-    floats_sent = 0
-    for i, (path, g, q, spec) in enumerate(leaves):
-        ms = matrixize.matrix_shape(g.shape, spec) if q is not None else None
-        if ms is None:
-            mats.append(None)
-            qs.append(None)
-            plan_shapes.append(None)
-            lshapes.append(None)
-            floats_sent += matrixize.uncompressed_floats(g.shape)
-            continue
-        batch_shape, n, m = ms
-        count = math.prod(batch_shape) if batch_shape else 1
-        mats.append(matrixize.to_matrix(g, spec)
-                    .astype(cfg.dtype).reshape((count, n, m)))
-        if not cfg.warm_start:
-            q = jax.random.normal(_leaf_key(key, path), q.shape, dtype=cfg.dtype)
-        qs.append(q.astype(cfg.dtype).reshape((count, m, cfg.rank)))
-        plan_shapes.append((count, n, m))
-        lshapes.append((batch_shape, n, m))
-        floats_sent += matrixize.compressed_floats(g.shape, spec, cfg.rank)
-
-    plan = matrixize.plan_buckets(plan_shapes,
-                                  tolerance=cfg.bucket_pad_tolerance)
-    unc_ids = [i for i, s in enumerate(plan_shapes) if s is None]
-
-    m_bufs = [matrixize.pack_matrices(b, mats) for b in plan.buckets]
-    q_bufs = [matrixize.pack_factors(b, qs) for b in plan.buckets]
+    payloads = engine.MatrixPayloads.build(
+        deltas, state, specs, rank=cfg.rank, dtype=cfg.dtype,
+        tolerance=cfg.bucket_pad_tolerance,
+        resample_key=None if cfg.warm_start else key)
+    transport = engine.Transport(ctx=ctx, wire_dtype=cfg.wire_dtype,
+                                 max_chunk_bytes=cfg.max_chunk_bytes)
+    m_bufs, q_bufs = payloads.m_bufs, payloads.q_bufs
 
     # -- power iteration: 2 fused collectives per round ---------------------
-    unc_agg = [leaves[i][1] for i in unc_ids]  # identity if no uncompressed
+    unc_agg = payloads.unc_values  # identity if no uncompressed leaves
     p_hats = q_locals = []
     for it in range(n_iter):
         p_locals = [project(mb, qb) for mb, qb in zip(m_bufs, q_bufs)]
         extra = unc_agg if it == 0 else []
-        reduced = ctx.pmean_flat(p_locals + extra)
+        reduced = transport.reduce_mean(p_locals + extra)
         p_bufs = reduced[:len(p_locals)]
         if it == 0:
             unc_agg = reduced[len(p_locals):]
         p_hats = [orth(p) for p in p_bufs]
         q_locals = [backproject(mb, ph) for mb, ph in zip(m_bufs, p_hats)]
-        q_bufs = ctx.pmean_flat(q_locals)
+        q_bufs = transport.reduce_mean(q_locals)
 
     agg_bufs = [jnp.einsum("bnr,bmr->bnm", ph, qb)
                 for ph, qb in zip(p_hats, q_bufs)]
@@ -254,41 +222,10 @@ def _compress_aggregate_bucketed(
     else:
         recon_bufs = agg_bufs
 
-    # -- scatter back to the tree ------------------------------------------
-    unc_agg_by_id = dict(zip(unc_ids, unc_agg))
-    results = []
-    for i, (path, g, q, spec) in enumerate(leaves):
-        if plan_shapes[i] is None:
-            results.append((unc_agg_by_id[i], g, None))
-            continue
-        batch_shape, n, m = lshapes[i]
-        b_id, entry = plan.entry_for(i)
-
-        def crop_mat(buf):
-            mat = matrixize.unpack_entry(buf, entry, n, m)
-            mat = mat.reshape(batch_shape + (n, m))
-            return matrixize.from_matrix(mat, g.shape, spec).astype(g.dtype)
-
-        new_q = matrixize.unpack_entry(q_bufs[b_id], entry, m)
-        new_q = new_q.reshape(batch_shape + (m, cfg.rank))
-        results.append((crop_mat(agg_bufs[b_id]), crop_mat(recon_bufs[b_id]),
-                        new_q))
-
-    counter = [0]
-
-    def emit(path, g, q, spec):
-        out = results[counter[0]]
-        counter[0] += 1
-        return out
-
-    triples = jax.tree_util.tree_map_with_path(
-        emit, deltas, state, specs, is_leaf=lambda x: x is None)
-    is_t = lambda x: isinstance(x, tuple)
-    agg = jax.tree_util.tree_map(lambda t: t[0], triples, is_leaf=is_t)
-    recon = jax.tree_util.tree_map(lambda t: t[1], triples, is_leaf=is_t)
-    new_state = jax.tree_util.tree_map(lambda t: t[2], triples, is_leaf=is_t)
+    agg, recon, new_state = payloads.scatter(agg_bufs, recon_bufs, q_bufs,
+                                             unc_agg)
     return PowerSGDOut(agg=agg, recon=recon, state=new_state,
-                       bits_per_worker=floats_sent * 32)
+                       bits_per_worker=payloads.bits)
 
 
 def compressed_floats_total(shapes, specs, rank: int) -> int:

@@ -41,6 +41,8 @@ class TrainHyper:
     orthogonalizer: str = "gram_schmidt"
     use_pallas: bool = False
     bucketing: str = "auto"         # "auto"/"on" = batched engine, "off" = per-leaf
+    wire_dtype: str = "auto"        # fused-collective wire policy ("auto"|"float32"|"bfloat16")
+    start_compress_step: int = 0    # dense warmup steps before compression kicks in
 
 
 def _schedule(hyper: TrainHyper, step):
@@ -64,7 +66,8 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
     if compressor is None:
         compressor = PowerSGDCompressor(
             rank=hyper.rank, orthogonalizer=hyper.orthogonalizer,
-            use_pallas=hyper.use_pallas, bucketing=hyper.bucketing)
+            use_pallas=hyper.use_pallas, bucketing=hyper.bucketing,
+            wire_dtype=hyper.wire_dtype)
 
     param_ps = model.pspecs(cfg)
     mspec_tree = model.mspecs(cfg)
@@ -88,7 +91,8 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
         new_params, new_state, aux = error_feedback.apply_updates(
             compressor, params, grads, state, mspec_tree,
             lr=lr, momentum=hyper.momentum, weight_decay=hyper.weight_decay,
-            ctx=ctx, key=key, use_pallas_apply=hyper.use_pallas)
+            ctx=ctx, key=key, use_pallas_apply=hyper.use_pallas,
+            start_compress_step=hyper.start_compress_step)
 
         new_state = EFState(
             error=jax.tree_util.tree_map(lambda e: e[None], new_state.error),
@@ -189,7 +193,8 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
     if compressor is None:
         compressor = PowerSGDCompressor(
             rank=hyper.rank, orthogonalizer=hyper.orthogonalizer,
-            use_pallas=hyper.use_pallas, bucketing=hyper.bucketing)
+            use_pallas=hyper.use_pallas, bucketing=hyper.bucketing,
+            wire_dtype=hyper.wire_dtype)
     mspec_tree = model.mspecs(cfg)
 
     def worker_step(params, ef_state, batch, key, weight):
@@ -208,7 +213,8 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
         new_params, new_state, aux = error_feedback.apply_updates(
             compressor, params, grads, ef_state, mspec_tree,
             lr=lr, momentum=hyper.momentum, weight_decay=hyper.weight_decay,
-            ctx=ctx, key=key, use_pallas_apply=hyper.use_pallas)
+            ctx=ctx, key=key, use_pallas_apply=hyper.use_pallas,
+            start_compress_step=hyper.start_compress_step)
 
         # metrics aggregate through the backend directly: they are
         # observability, not gradient traffic, and must not perturb the

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import error_feedback as ef_lib
+from repro.core import matrixize
 from repro.core.compressors import Compressor
 from repro.core.dist import MeshCtx
 from repro.data.synthetic import MarkovLM
@@ -69,10 +70,41 @@ def _make_cfg(spec: LMSpec):
         slots=(LayerSlot("attn", "dense"),))
 
 
+def payload_floats(params, specs, comp_state):
+    """(compressed, uncompressed) floats ONE step sends per worker, at the
+    state's *active* per-leaf ranks (adaptive schedules move them)."""
+    comp, unc = [0], [0]
+
+    def leaf(p, sp, q):
+        if q is None or matrixize.matrix_shape(p.shape, sp) is None:
+            unc[0] += matrixize.uncompressed_floats(p.shape)
+        else:
+            comp[0] += matrixize.compressed_floats(p.shape, sp, q.shape[-1])
+
+    jax.tree_util.tree_map(leaf, params, specs, comp_state,
+                           is_leaf=lambda x: x is None)
+    return comp[0], unc[0]
+
+
 def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
-             eval_batches: int = 8):
+             eval_batches: int = 8, controller=None,
+             init_comp_transform=None):
     """Train the benchmark LM under EF + ``compressor`` with W simulated
-    workers.  Returns a result dict."""
+    workers.  Returns a result dict.
+
+    ``controller`` (a :class:`repro.core.powersgd.RankController`) drives an
+    adaptive-rank schedule: it is consulted before every step with the
+    previous step's worker-mean residual ratio (requires a compressor built
+    with ``track_residual=True`` for residual-driven schedules) and rank
+    switches transition the warm-start factors in place — the jitted step
+    retraces on the new shapes.  The result then also reports the rank
+    switch history and the *cumulative* compressed floats actually sent,
+    the adaptive-vs-fixed bits comparison of ``adaptive_rank_profile``.
+
+    ``init_comp_transform(comp_state) -> comp_state`` rewrites the freshly
+    initialized compressor state before training — how an
+    :func:`repro.core.autotune.apply_plan` installs per-bucket ranks.
+    """
     from repro.core.dist import SINGLE
     from repro.models import model as model_lib
 
@@ -81,6 +113,8 @@ def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
     params = model_lib.init(key, cfg, model_shards=1)
     specs = model_lib.mspecs(cfg)
     state = ef_lib.init_state(compressor, params, specs, key)
+    if init_comp_transform is not None:
+        state = ef_lib.replace_comp(state, init_comp_transform(state.comp))
     # per-worker error buffers: broadcast zeros over the worker axis
     state = ef_lib.EFState(
         error=jax.tree_util.tree_map(
@@ -108,7 +142,9 @@ def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
         out = compressor.step(deltas, comp_state,
                               specs, ctx=SIM_CTX, key=key)
         new_err = jax.tree_util.tree_map(jnp.subtract, deltas, out.recon)
-        return out.agg, out.state, new_err, metrics["lm_loss"]
+        res = (out.metrics["residual_ratio"] if out.metrics is not None
+               else jnp.zeros(()))
+        return out.agg, out.state, new_err, metrics["lm_loss"], res
 
     @jax.jit
     def train_step(params, state, batch, key):
@@ -116,7 +152,7 @@ def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
         bw = jax.tree_util.tree_map(
             lambda x: x.reshape((spec.workers, spec.batch_per_worker) + x.shape[1:]),
             batch)
-        agg, comp_state, new_err, losses = jax.vmap(
+        agg, comp_state, new_err, losses, res = jax.vmap(
             worker_step, in_axes=(None, 0, 0, None, None, None),
             out_axes=0, axis_name=SIM_AXIS,
         )(params, state.error, bw, state.comp, state.step, key)
@@ -129,7 +165,7 @@ def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
             lambda x, d, m: x - spec.lr * (d + m), params, agg, new_m)
         new_state = ef_lib.EFState(error=new_err, momentum=new_m,
                                    comp=comp_state, step=state.step + 1)
-        return new_p, new_state, losses
+        return new_p, new_state, losses, jnp.mean(res)
 
     @jax.jit
     def eval_loss(params, batch):
@@ -140,9 +176,24 @@ def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
     key_run = jax.random.key(123)
     t0 = time.time()
     bits = None
+    residual = None
+    # exact per-step payload accounting needs per-leaf state (PowerSGD's Q
+    # factors carry the active ranks); stateless schemes fall back to the
+    # constant probe bits below
+    stateful = state.comp is not None
+    step_floats = payload_floats(params, specs, state.comp) if stateful \
+        else (0, 0)
+    floats_sent = 0
     for i in range(spec.steps):
+        if controller is not None:
+            new_comp, changed = controller.update(state.comp, i, residual)
+            if changed:  # factor shapes moved: the step retraces
+                state = ef_lib.replace_comp(state, new_comp)
+                step_floats = payload_floats(params, specs, state.comp)
+        floats_sent += step_floats[0]
         batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-        params, state, losses = train_step(params, state, batch, key_run)
+        params, state, losses, res = train_step(params, state, batch, key_run)
+        residual = float(res)
         if bits is None:
             shapes = jax.tree_util.tree_map(
                 lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
@@ -153,7 +204,7 @@ def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
     train_time = time.time() - t0
 
     ev = float(np.mean([float(eval_loss(params, b)) for b in eval_data]))
-    return {
+    result = {
         "compressor": compressor.name,
         "eval_loss": ev,
         "eval_ppl": float(np.exp(ev)),
@@ -162,7 +213,16 @@ def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
         "train_time_s": train_time,
         "steps": spec.steps,
         "workers": spec.workers,
+        # cumulative *compressed* floats over the run, at each step's active
+        # ranks — constant-rank runs send steps × (payload floats); for
+        # stateless schemes this falls back to the probe's payload count
+        "compressed_floats_total": (int(floats_sent) if stateful
+                                    else int(bits) // 32 * spec.steps),
     }
+    if controller is not None:
+        result["rank_history"] = list(controller.history)
+        result["final_rank"] = controller.rank
+    return result
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,7 @@ def main() -> None:
         "table6_other_methods": lambda: tables.table6_other_methods(spec),
         "table7_lstm": lambda: tables.table7_lstm(40 if args.quick else 120),
         "fig3_scaling": lambda: tables.fig3_scaling(params_small, specs_small),
+        "adaptive_rank_profile": lambda: tables.adaptive_rank_profile(spec),
         "comm_profile": lambda: tables.comm_profile(params_small, specs_small),
         "zoo_transport_profile": lambda: tables.zoo_transport_profile(
             params_small, specs_small),

@@ -217,6 +217,98 @@ def table7_lstm(spec_steps: int = 120) -> list:
     return [run("identity", 2), run("powersgd", 1), run("powersgd", 4)]
 
 
+def adaptive_rank_profile(spec: LMSpec) -> list:
+    """Beyond-paper: adaptive rank schedules vs the paper's fixed rank.
+
+    Trains the benchmark LM under (a) fixed ranks 1/2/4, (b) a PowerSGD+-
+    style *growth* staircase 1→2→4 — low rank through the noisy early
+    phase, full rank only once gradient structure is worth the bits; the
+    measured winner: ~42% fewer cumulative compressed floats at equal-or-
+    better final loss than fixed rank-4 — (c) the *decay* staircase 4→2→1
+    as the honest contrast (a mid-run rank drop injects reconstruction
+    error the remaining steps cannot re-absorb at a fixed horizon, so it
+    trades loss for bits), (d) the residual-energy-driven policy, and (e)
+    a run at the α-β autotuner's per-bucket rank assignment under a
+    50%-of-rank-4 bits budget.  The claim the table demonstrates (ISSUE 4
+    acceptance): an adaptive schedule sends ≥25% fewer cumulative
+    compressed floats than fixed rank-4 at equal-or-better final loss.
+    """
+    from repro.core import autotune
+    from repro.core import powersgd as ps_lib
+    from repro.core.compressors import PowerSGDCompressor
+    from repro.models import model as model_lib
+    from benchmarks.common import _make_cfg
+
+    s = spec.steps
+
+    def row(label, result, extra=None):
+        r = {
+            "schedule": label,
+            "eval_loss": round(result["eval_loss"], 4),
+            "compressed_mfloats_total":
+                round(result["compressed_floats_total"] / 1e6, 4),
+        }
+        if "rank_history" in result:
+            r["rank_history"] = "|".join(
+                f"{rk}@{st}" for st, rk in result["rank_history"])
+        r.update(extra or {})
+        return r
+
+    rows = []
+    fixed = {}
+    for r in (1, 2, 4):
+        res = train_lm(make_compressor("powersgd", rank=r), spec)
+        fixed[r] = res
+        rows.append(row(f"fixed_rank{r}", res))
+    base_floats = fixed[4]["compressed_floats_total"]
+
+    # (b) growth staircase: 1 for the first third, 2 for the second, 4
+    # after — cumulative floats = (1+2+4)/12 ≈ 58% of fixed rank-4
+    for label, stair in (
+            ("staircase_up_1_2_4", ps_lib.StaircaseRank(
+                milestones=((0, 1), (s // 3, 2), (2 * s // 3, 4)))),
+            ("staircase_down_4_2_1", ps_lib.StaircaseRank(
+                milestones=((0, 4), (s // 3, 2), (2 * s // 3, 1))))):
+        comp = PowerSGDCompressor(rank_schedule=stair)
+        res = train_lm(comp, spec, controller=comp.controller())
+        rows.append(row(label, res, {
+            "savings_vs_fixed_rank4": round(
+                1 - res["compressed_floats_total"] / base_floats, 4)}))
+
+    # (d) residual-energy-driven: shrinks when the tracked subspace already
+    # covers the gradient, grows when too much energy is left behind
+    comp = PowerSGDCompressor(
+        rank_schedule=f"residual:min=1,max=8,init=4,every={max(s // 8, 1)}")
+    res = train_lm(comp, spec, controller=comp.controller())
+    rows.append(row("residual_energy", res, {
+        "savings_vs_fixed_rank4": round(
+            1 - res["compressed_floats_total"] / base_floats, 4)}))
+
+    # (e) α-β autotuned per-bucket ranks under a 50%-of-rank-4 bits budget
+    cfg = _make_cfg(spec)
+    params = model_lib.init(jax.random.key(spec.seed), cfg, 1)
+    shapes = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+    mspecs = model_lib.mspecs(cfg)
+    comp4 = ps_lib.compressed_floats_total(shapes, mspecs, 4)
+    plan = autotune.autotune(
+        shapes, mspecs, bits_budget=comp4 * 32 // 2,
+        workers=spec.workers, hw=autotune.HardwareModel.from_backend(
+            "nccl_10gbit"))
+    comp = autotune.make_tuned_compressor(plan)
+    key = jax.random.key(spec.seed)
+    res = train_lm(comp, spec, init_comp_transform=lambda cs:
+                   autotune.apply_plan(plan, cs, shapes, mspecs, key))
+    rows.append(row("autotuned_budget50", res, {
+        "savings_vs_fixed_rank4": round(
+            1 - res["compressed_floats_total"] / base_floats, 4),
+        "bucket_ranks": "|".join(
+            f"{d.n}x{d.m}:r{d.rank}" for d in plan.decisions),
+        "wire_dtype": plan.wire_dtype,
+        "predicted_comm_ms": round(plan.predicted_comm_s * 1e3, 3)}))
+    return rows
+
+
 def comm_profile(params, specs) -> list:
     """Beyond-paper: the bucketed engine's communication profile.
 

@@ -13,7 +13,10 @@ Demonstrates, step by step:
   5. the bucketed batched-compression engine: one step of a multi-layer
      model issues exactly 2 data-axis collectives instead of 2 per matrix,
   6. the unified transport engine across the zoo: linear schemes ride one
-     fused all-reduce, non-linear schemes a genuine W-scaled all-gather.
+     fused all-reduce, non-linear schemes a genuine W-scaled all-gather,
+  7. adaptive rank: a staircase schedule moving the rank mid-run with
+     bit-exact warm-start hand-off, and the α-β autotuner picking
+     per-bucket ranks + the wire policy under a bits budget.
 """
 
 import jax
@@ -187,6 +190,50 @@ for name in ("identity", "powersgd", "random_k", "sign_norm", "top_k"):
           f"{stats.gather_collectives} gather)")
 print("  (gather bytes scale with W on the wire — CollectiveStats records"
       "\n   the fanout; see benchmarks/run.py --only zoo_transport_profile)")
+
+# ---------------------------------------------------------------------------
+section("7. Adaptive rank: schedules + the α-β autotuner")
+
+# (mirrors the README "Adaptive rank" snippet)
+# A. scheduled rank: low rank early, full rank late (PowerSGD+-style).
+#    The live rank is carried by the state (Q.shape[-1]); the controller
+#    transitions it between steps and the retained columns survive
+#    bit-exactly.
+from repro.core import autotune
+
+comp7 = PowerSGDCompressor(rank_schedule="1@0,2@2,4@4")
+ctl = comp7.controller()
+state7 = comp7.init(mshapes, mspecs, KEY)
+for step in range(6):
+    state7, changed = ctl.update(state7, step)   # retraces on a switch
+    out7 = comp7.step(mgrads, state7, mspecs, key=KEY)
+    state7 = out7.state
+    if step in (0, 2, 4):
+        r = state7["layer0/w"].shape[-1]
+        print(f"  step {step}: rank {r}, payload "
+              f"{out7.bits_per_worker // 32} floats")
+print(f"  rank history: {ctl.history}")
+
+# B. autotuned: per-bucket ranks + wire policy under a bits budget,
+#    priced with an α-β hardware model
+from repro.core.powersgd import compressed_floats_total
+
+budget_bits = compressed_floats_total(mshapes, mspecs, 4) * 32 // 2
+plan = autotune.autotune(
+    mshapes, mspecs, bits_budget=budget_bits, workers=16,
+    hw=autotune.HardwareModel.from_backend("nccl_10gbit"))
+comp_t = autotune.make_tuned_compressor(plan)            # wire policy applied
+state_t = autotune.apply_plan(plan, comp_t.init(mshapes, mspecs, KEY),
+                              mshapes, mspecs, KEY)      # per-bucket ranks
+print(f"  autotuned under {budget_bits} payload bits (50% of fixed rank-4):")
+for d in plan.decisions:
+    print(f"    bucket {d.n}x{d.m} (x{d.count}): rank {d.rank}")
+print(f"    wire_dtype={plan.wire_dtype}, predicted comm "
+      f"{plan.predicted_comm_s*1e3:.3f} ms/step @ W=16")
+stats7 = CollectiveStats()
+comp_t.step(mgrads, state_t, mspecs, ctx=MeshCtx(stats=stats7), key=KEY)
+print(f"    still {stats7.data_collectives} fused collectives/step "
+      "(mixed per-bucket ranks ride the same 2 flat reduces)")
 
 print("\nDone. PowerSGD tracks uncompressed SGD while sending "
       f"{(dim_in*dim_out)/(2*(dim_in+dim_out)):.0f}x fewer floats per step.")

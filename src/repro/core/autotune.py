@@ -1,0 +1,344 @@
+"""α-β autotuner for PowerSGD's compressed-collective transport.
+
+Picking the rank is the whole game (paper §4.2, Tables 1–3): too low hurts
+quality, too high wastes the bandwidth the scheme exists to save — and
+whether a configuration actually beats dense SGD depends on the *cluster*,
+not just the payload size (Zhang et al., 2023: compression knobs must be
+tuned against an α-β communication model).  This module closes that loop:
+
+    shapes/specs ──► bucket plan (matrixize.plan_buckets, the same
+                     deterministic plan the engine executes)
+    CollectiveStats / roofline ──► HardwareModel (α latency, β bandwidth)
+    bits budget ──► per-bucket (rank, wire_dtype, max_chunk_bytes)
+
+:func:`autotune` returns a :class:`TunePlan`; :func:`apply_plan` installs
+its per-bucket ranks into a live compressor state with the
+warm-start-preserving transitions of :func:`repro.core.powersgd.
+transition_state` (retained factor columns survive bit-exactly), and
+``wire_dtype`` / ``max_chunk_bytes`` thread into
+:class:`~repro.core.compressors.PowerSGDCompressor` unchanged.
+
+Two deliberate constraints, both in service of the engine's
+O(1)-collectives-per-step invariant:
+
+* ``wire_dtype`` is selected *globally*, not per bucket: per-bucket wire
+  dtypes would fragment the fused flat chunk into one collective per dtype
+  per phase (see ``plan_flat``'s "auto" policy), trading the latency win
+  the transport engine exists for.  The tuner therefore scores each
+  candidate dtype over the whole plan and keeps the cheapest.
+* Ranks are assigned per *bucket*, never per leaf: leaves sharing a shape
+  bucket share a ``(B, m, r)`` factor slab, so a per-leaf split would
+  force bucket fission.  Bucket membership is a pure function of matrix
+  shapes, so a plan computed here stays valid for the engine's own
+  planning pass (``engine.MatrixPayloads.build`` re-derives the identical
+  buckets and reads the ranks off the transitioned state).
+
+The greedy knapsack (see :func:`autotune`) starts every bucket at the
+largest candidate rank and walks ranks down until the bits budget holds,
+each time shrinking the bucket with the best bits-saved per modeled
+quality loss.  Quality loss for stepping bucket b from r to r' is the
+flat-tail spectrum proxy ``(r − r')/min(n, m) · Σ count·n·m`` — each extra
+tracked direction captures ~1/min(n,m) of a matrix's residual tail energy
+— optionally scaled by a *measured* per-bucket residual-energy ratio
+(``CompressOut.metrics["bucket_residual_ratio"]`` from a probe step with
+``track_residual=True``): buckets whose residual is already low are
+cheaper to shrink.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import matrixize, powersgd
+from repro.launch import roofline
+
+# α-β parameters of the paper's Appendix B cluster (10 Gbit/s ethernet),
+# mirrored from benchmarks/common.py — core cannot import benchmarks/.
+_BACKENDS = {
+    "nccl_10gbit": (30e-6, 10e9 / 8),
+    "gloo_10gbit": (150e-6, 2.5e9 / 8),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """α-β link model: one collective costs α·(#rounds) + β·(bytes moved).
+
+    ``alpha`` is the per-round launch latency in seconds, ``bw`` the
+    per-link bandwidth in bytes/s (β = 1/bw).
+    """
+
+    alpha: float
+    bw: float
+
+    @classmethod
+    def from_roofline(cls, alpha: float = 20e-6) -> "HardwareModel":
+        """The TPU-v5e ICI link of :mod:`repro.launch.roofline`
+        (~50 GB/s/link) with a nominal launch latency."""
+        return cls(alpha=alpha, bw=roofline.LINK_BW)
+
+    @classmethod
+    def from_backend(cls, name: str) -> "HardwareModel":
+        """The paper's ethernet backends (``nccl_10gbit``/``gloo_10gbit``),
+        same numbers as ``benchmarks/common.py``."""
+        alpha, bw = _BACKENDS[name]
+        return cls(alpha=alpha, bw=bw)
+
+    def collective_time(self, wire_bytes: float, workers: int,
+                        kind: str = "reduce") -> float:
+        """Modeled seconds for one fused collective among ``workers``."""
+        if workers <= 1:
+            return 0.0
+        if kind == "reduce":  # ring all-reduce
+            rounds = math.ceil(math.log2(workers))
+            return (self.alpha * rounds
+                    + 2 * (workers - 1) / workers * wire_bytes / self.bw)
+        # all-gather: a worker receives every other worker's payload
+        return (self.alpha + wire_bytes / self.bw) * (workers - 1)
+
+
+def comm_time_from_stats(stats, workers: int, hw: HardwareModel) -> float:
+    """α-β time of one *recorded* step (`repro.core.dist.CollectiveStats`):
+    each collective at its actual wire size, itemsize and transport kind.
+    This is how a measured trace calibrates/validates a :class:`TunePlan`
+    (compare against ``TunePlan.predicted_comm_s``)."""
+    total = 0.0
+    for size, itemsize, kind in zip(stats.sizes, stats.itemsizes,
+                                    stats.kinds):
+        total += hw.collective_time(size * itemsize, workers, kind)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# plan data model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketDecision:
+    """The tuner's verdict for one shape bucket."""
+
+    bucket: int                # index into the BucketPlan's buckets
+    n: int                     # bucket (padded) rows
+    m: int                     # bucket (padded) cols
+    count: int                 # stacked matrices in the bucket
+    rank: int                  # assigned rank
+    payload_floats: int        # Σ_leaves count·r·(n_leaf + m_leaf), unpadded
+    wire_floats: int           # count·r·(n + m) at bucket dims (what travels)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunePlan:
+    """Per-bucket ranks + a global wire policy, under a bits budget."""
+
+    decisions: Tuple[BucketDecision, ...]
+    wire_dtype: str
+    max_chunk_bytes: Optional[int]
+    tolerance: float           # bucket_pad_tolerance the plan was built at —
+    #                            the engine must re-plan with the SAME value
+    #                            or its buckets (and therefore which leaves
+    #                            must share a rank) diverge from this plan's
+    payload_floats: int        # compressed floats per step (bits metric)
+    uncompressed_floats: int   # vector leaves riding the first reduce
+    bits_per_step: int         # (payload + uncompressed) × 32 — the paper's
+    #                            Tables 3/10/11 accounting convention
+    predicted_comm_s: float    # α-β modeled gradient exchange per step
+    workers: int
+    leaf_ranks: Tuple[Optional[int], ...]  # per planner leaf, tree order
+
+    def rank_tree(self, shapes, specs):
+        """Per-leaf rank tree aligned with ``shapes`` (None = uncompressed
+        or untouched) — the shape :func:`repro.core.powersgd.
+        transition_state` takes for per-bucket switches."""
+        idx = [0]
+
+        def leaf(shape_leaf, spec):
+            r = self.leaf_ranks[idx[0]]
+            idx[0] += 1
+            return r
+
+        return jax.tree_util.tree_map(leaf, shapes, specs)
+
+
+def _collect(shapes, specs):
+    """(shape, spec) pairs in deterministic tree order — the exact leaf
+    order ``engine.collect_leaves`` uses, so planner indices line up."""
+    leaves = []
+    jax.tree_util.tree_map(
+        lambda s, sp: leaves.append((tuple(s.shape), sp)), shapes, specs)
+    return leaves
+
+
+def _phase_time(wire_floats: Sequence[int], unc_floats: int, itemsize: int,
+                workers: int, hw: HardwareModel,
+                max_chunk_bytes: Optional[int]) -> float:
+    """Modeled time of the two fused reduce phases of one PowerSGD step.
+
+    Phase 1 carries every bucket's P slab (n-side factors) plus the
+    uncompressed leaves; phase 2 the Q slabs (m-side).  Factors split
+    r·(n+m) as r·n / r·m; modeling each phase at half the total is exact
+    in aggregate and keeps the tuner independent of the n/m split."""
+    total = 0.0
+    for phase_floats in (sum(wire_floats) / 2 + unc_floats,
+                         sum(wire_floats) / 2):
+        nbytes = phase_floats * itemsize
+        chunks = (1 if not max_chunk_bytes
+                  else max(1, math.ceil(nbytes / max_chunk_bytes)))
+        per_chunk = nbytes / chunks
+        total += sum(hw.collective_time(per_chunk, workers, "reduce")
+                     for _ in range(chunks))
+    return total
+
+
+def autotune(shapes, specs, *, bits_budget: int, workers: int,
+             hw: Optional[HardwareModel] = None,
+             ranks: Sequence[int] = (1, 2, 4, 8),
+             wire_dtypes: Sequence[str] = ("float32", "bfloat16"),
+             max_chunk_bytes_options: Sequence[Optional[int]] = (None,),
+             tolerance: float = 0.25,
+             bucket_residuals: Optional[Sequence[float]] = None) -> TunePlan:
+    """Select per-bucket ``rank`` + global ``(wire_dtype, max_chunk_bytes)``.
+
+    ``bits_budget`` bounds the *payload* bits per step per worker (the
+    paper's accounting: 32 bits per compressed float plus the uncompressed
+    vector leaves, which are a fixed cost the tuner cannot reduce).  The
+    rank assignment is a greedy walk-down (module docstring); the wire
+    policy then minimizes the α-β modeled exchange time over the candidate
+    dtypes/chunk caps.  ``bucket_residuals`` (ordered like the bucket plan,
+    e.g. from a ``track_residual=True`` probe step) steers the walk-down
+    toward buckets whose subspace already covers their gradients.
+
+    Deterministic: same inputs → same plan, on every worker.
+    """
+    hw = hw or HardwareModel.from_roofline()
+    ranks = sorted(set(int(r) for r in ranks))
+    assert ranks and ranks[0] >= 1, ranks
+
+    leaves = _collect(shapes, specs)
+    plan_shapes, unc_floats = [], 0
+    for shape, spec in leaves:
+        ms = matrixize.matrix_shape(shape, spec)
+        if ms is None:
+            plan_shapes.append(None)
+            unc_floats += matrixize.uncompressed_floats(shape)
+        else:
+            batch_shape, n, m = ms
+            plan_shapes.append((math.prod(batch_shape) if batch_shape else 1,
+                                n, m))
+    plan = matrixize.plan_buckets(plan_shapes, tolerance=tolerance)
+    if bucket_residuals is not None:
+        assert len(bucket_residuals) == len(plan.buckets), (
+            len(bucket_residuals), len(plan.buckets))
+
+    # per bucket: payload floats per rank unit (real leaf dims), wire floats
+    # per rank unit (padded bucket dims), and the quality-proxy weight
+    pay_unit = [sum(e.count * (e.n + e.m) for e in b.entries)
+                for b in plan.buckets]
+    wire_unit = [b.count * (b.n + b.m) for b in plan.buckets]
+    elems = [sum(e.count * e.n * e.m for e in b.entries)
+             for b in plan.buckets]
+    min_nm = [min(b.n, b.m) for b in plan.buckets]
+    # rank is only compression while r·(n+m) < n·m AND r ≤ min(n, m); cap
+    # each bucket's candidate grid there (per its smallest member) so tiny
+    # buckets never get ranks that cost more than sending them dense — and
+    # never soak up budget the walk-down should leave to the big buckets
+    rank_cap = [max(1, min(min(e.n, e.m, e.n * e.m // (e.n + e.m))
+                           for e in b.entries))
+                for b in plan.buckets]
+
+    # --- greedy rank walk-down under the bits budget ----------------------
+    def top_index(cap: int) -> int:
+        """Largest candidate ≤ cap (index 0 if even ranks[0] exceeds it)."""
+        return max([i for i, r in enumerate(ranks) if r <= cap] or [0])
+
+    cur = {b: top_index(rank_cap[b]) for b in range(len(plan.buckets))}
+
+    def payload_floats() -> int:
+        return sum(pay_unit[b] * ranks[i] for b, i in cur.items())
+
+    budget_floats = max(0, bits_budget // 32 - unc_floats)
+    while payload_floats() > budget_floats:
+        best, best_score = None, None
+        for b, i in cur.items():
+            if i == 0:
+                continue
+            saved = pay_unit[b] * (ranks[i] - ranks[i - 1])
+            loss = (ranks[i] - ranks[i - 1]) / max(min_nm[b], 1) * elems[b]
+            if bucket_residuals is not None:
+                # low measured residual ⇒ subspace over-covers ⇒ cheap cut
+                loss *= max(float(bucket_residuals[b]), 1e-3)
+            score = saved / max(loss, 1e-12)
+            if best_score is None or score > best_score:
+                best, best_score = b, score
+        if best is None:
+            break  # every bucket at min rank: budget is simply infeasible
+        cur[best] -= 1
+
+    decisions = tuple(
+        BucketDecision(
+            bucket=b, n=bk.n, m=bk.m, count=bk.count, rank=ranks[cur[b]],
+            payload_floats=pay_unit[b] * ranks[cur[b]],
+            wire_floats=wire_unit[b] * ranks[cur[b]])
+        for b, bk in enumerate(plan.buckets))
+
+    # --- wire policy: cheapest α-β candidate over the whole plan ----------
+    best_cfg, best_time = None, None
+    for wd in wire_dtypes:
+        if wd not in matrixize.WIRE_DTYPES or wd == "auto":
+            raise ValueError(
+                f"wire_dtype candidate {wd!r} must be an explicit dtype "
+                f"(one of {[d for d in matrixize.WIRE_DTYPES if d != 'auto']})")
+        itemsize = 2 if wd == "bfloat16" else 4
+        for mcb in max_chunk_bytes_options:
+            t = _phase_time([d.wire_floats for d in decisions], unc_floats,
+                            itemsize, workers, hw, mcb)
+            if best_time is None or t < best_time:
+                best_cfg, best_time = (wd, mcb), t
+
+    # per-leaf ranks, planner order (None = uncompressed leaf)
+    leaf_ranks: List[Optional[int]] = []
+    for i, ps in enumerate(plan_shapes):
+        if ps is None:
+            leaf_ranks.append(None)
+        else:
+            b_id, _ = plan.entry_for(i)
+            leaf_ranks.append(decisions[b_id].rank)
+
+    pay = sum(d.payload_floats for d in decisions)
+    return TunePlan(
+        decisions=decisions, wire_dtype=best_cfg[0],
+        max_chunk_bytes=best_cfg[1], tolerance=tolerance,
+        payload_floats=pay, uncompressed_floats=unc_floats,
+        bits_per_step=(pay + unc_floats) * 32,
+        predicted_comm_s=best_time, workers=workers,
+        leaf_ranks=tuple(leaf_ranks))
+
+
+def apply_plan(plan: TunePlan, state, shapes, specs,
+               key: jax.Array):
+    """Install the plan's per-bucket ranks into a live compressor state via
+    warm-start-preserving transitions (retained columns bit-exact).  The
+    state must be unreplicated (no stacked worker dim); fresh columns are
+    path-keyed, so every worker computes identical ones."""
+    return powersgd.transition_state(state, plan.rank_tree(shapes, specs),
+                                     key)
+
+
+def make_tuned_compressor(plan: TunePlan, **kw):
+    """A :class:`~repro.core.compressors.PowerSGDCompressor` carrying the
+    plan's wire policy AND its ``bucket_pad_tolerance`` — the engine must
+    re-derive the exact buckets the plan assigned ranks to, or two leaves
+    the plan put in different buckets could land in one bucket with mixed
+    ranks.  ``init`` seeds at the plan's *largest* rank; call
+    :func:`apply_plan` on the fresh state to install the per-bucket ranks
+    (or transition an existing warm state mid-run)."""
+    from repro.core.compressors import PowerSGDCompressor
+
+    rank = max((d.rank for d in plan.decisions), default=1)
+    return PowerSGDCompressor(rank=rank, wire_dtype=plan.wire_dtype,
+                              max_chunk_bytes=plan.max_chunk_bytes,
+                              bucket_pad_tolerance=plan.tolerance, **kw)

@@ -210,6 +210,16 @@ class PowerSGDCompressor(Compressor):
     factors) plus ``32 · numel`` per uncompressed leaf.  Bucket zero-padding
     is excluded — it is an engine artifact, not payload (see
     ``CollectiveStats`` for wire bytes).
+
+    Adaptive rank: ``rank`` only seeds ``init``; the *live* rank is carried
+    by the state's Q factors and may change between steps.  Pass
+    ``rank_schedule`` (anything :func:`repro.core.powersgd.parse_schedule`
+    accepts — ``"4@0,2@60"``, ``"residual:min=1,max=8"``, a
+    ``RankSchedule``) and drive :meth:`controller` from the host training
+    loop; per-leaf bits accounting follows each factor's own rank
+    automatically.  Residual-driven schedules force ``track_residual`` on,
+    which adds ``residual_ratio`` (and per-bucket ratios under the fused
+    engine) to ``CompressOut.metrics``.
     """
 
     name = "powersgd"
@@ -219,20 +229,34 @@ class PowerSGDCompressor(Compressor):
     def __init__(self, rank=2, orthogonalizer="gram_schmidt", warm_start=True,
                  num_iters=1, error_mode="global", use_pallas=False,
                  bucketing="auto", bucket_pad_tolerance=0.25,
-                 wire_dtype="auto", max_chunk_bytes=None):
+                 wire_dtype="auto", max_chunk_bytes=None,
+                 rank_schedule=None, track_residual=False):
         super().__init__(
             transport="per_leaf" if bucketing == "off" else "fused",
             wire_dtype=wire_dtype, max_chunk_bytes=max_chunk_bytes)
+        self.rank_schedule = (None if rank_schedule is None
+                              else powersgd.parse_schedule(rank_schedule))
+        if self.rank_schedule is not None:
+            rank = self.rank_schedule.initial_rank()
+            track_residual = (track_residual
+                              or self.rank_schedule.needs_residual)
         self.cfg = powersgd.PowerSGDConfig(
             rank=rank, orthogonalizer=orthogonalizer, warm_start=warm_start,
             num_iters=num_iters, error_mode=error_mode, use_pallas=use_pallas,
             bucketing=bucketing, bucket_pad_tolerance=bucket_pad_tolerance,
             wire_dtype=wire_dtype, max_chunk_bytes=max_chunk_bytes,
+            track_residual=track_residual,
         )
         if num_iters > 1:
             self.name = f"powersgd_best_approx_{num_iters}it"
         elif not warm_start:
             self.name = "powersgd_cold"
+
+    def controller(self, key=None) -> "powersgd.RankController":
+        """A fresh host-side driver for this compressor's rank schedule
+        (:class:`repro.core.powersgd.RankController`)."""
+        schedule = self.rank_schedule or powersgd.FixedRank(self.cfg.rank)
+        return powersgd.RankController(schedule, key)
 
     def init(self, shapes, specs, key):
         return powersgd.init_state(self.cfg, shapes, specs, key)

@@ -27,6 +27,30 @@ goes through a :class:`CollectiveBackend`.  Two backends exist:
 
 ``CollectiveStats`` recording and ``pmean_flat`` fusion live in ``MeshCtx``
 itself and therefore work unchanged under either backend.
+
+Which collective carries which payload
+--------------------------------------
+The transport engine (:mod:`repro.core.engine`, see its worked TopK
+example) maps every compressor's wire traffic onto exactly three ``MeshCtx``
+entry points:
+
+* :meth:`MeshCtx.pmean_flat` — the fused all-reduce.  Carries every
+  *linear* payload (PowerSGD's P and Q factor slabs — one call per
+  power-iteration phase — identity/random-k/random-block values, the
+  ``exact_rank_k`` oracle's dense gradient) and ALL uncompressed
+  bias/norm leaves, which ride the first reduce of the step whatever the
+  scheme.  One ``pmean`` per wire chunk; bytes flat in W.
+* :meth:`MeshCtx.allgather_flat` — the fused all-gather.  Carries
+  *non-linear* payloads (sign_norm's int8 signs + f32 norms, top_k's f32
+  values + i32 indices, spectral_atomo's (P, V) triplets); every part
+  returns with a leading worker dim of ``data_size()`` and is decoded
+  per worker.  Bytes scale with W (``CollectiveStats`` fanout).
+* :meth:`MeshCtx.gather_data_weight` — the scenario side channel: the
+  per-worker contribution weights a gather-pattern combine needs on the
+  receiver (one tiny all-gather, only under a weighted ``SimBackend``).
+
+``pmean_data``/``psum_data`` remain the unfused per-tensor path (the
+``transport="per_leaf"`` / ``bucketing="off"`` reference engines).
 """
 
 from __future__ import annotations

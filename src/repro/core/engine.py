@@ -50,6 +50,48 @@ Compressor protocol (duck-typed; see ``core/compressors.py``)::
     wire_mode:    "reduce" | "gather"
     recon_is_agg: bool  # error-feedback recon = aggregated decode (oracles)
 
+``Encoded.payload`` is the tuple of arrays that cross the wire; ``aux``
+stays on-device (shared-seed offsets, sampling matrices, shape/spec
+breadcrumbs for decode); ``bits`` is the scheme's analytic payload size.
+
+Worked end-to-end example — ``TopK(rank=2)`` over a 2-leaf tree on a
+W=4 data-parallel mesh, one ``run_step`` call::
+
+    tree:   {"w": f32[64, 32]  (spec kind="matrix"),
+             "b": f32[32]      (spec kind="none")}
+
+    1. encode  — "w": budget b = r·(n+m) = 192 coordinates;
+                 encode_leaf → Encoded(payload=(values f32[192],
+                                                indices i32[192]),
+                                       aux=(None, (64, 32)), bits=192·64)
+                 "b": encode_leaf → None (vector leaf, uncompressed)
+    2. fuse    — payload parts [values, indices] are planned onto wire
+                 chunks (matrixize.plan_flat): under wire_dtype="auto"
+                 the f32 values form chunk 0 (itemsize 4) and the i32
+                 indices chunk 1 (itemsize 4, its own dtype — ints are
+                 never cast); "b" rides a separate fused *reduce*.
+    3. travel  — wire_mode="gather": each chunk is all-gathered ONCE over
+                 the data axes (Transport.gather → MeshCtx.allgather_flat);
+                 every part returns with a leading worker dim:
+                 values f32[4, 192], indices i32[4, 192].  CollectiveStats
+                 records kind="gather", fanout=4, so bytes_per_collective
+                 reports 4× the per-worker payload.  Meanwhile "b" came
+                 back from ONE pmean as the worker-mean f32[32].
+                 Total: 2 gather collectives + 1 reduce — O(1), whatever
+                 the number of leaves.
+    4. decode  — decode_leaf runs per worker payload (vmap over the
+                 leading dim) → reconstructions f32[4, 64, 32], then
+                 Transport.combine_mean averages them (weighted by
+                 gather_data_weight() under scenario weights) into the
+                 aggregated update f32[64, 32].  The error-feedback recon
+                 is the *local* decode (recon_is_agg=False):
+                 decode_leaf(enc, enc.payload) → f32[64, 32].
+
+    A "reduce" scheme (e.g. UnbiasedRankK) differs only in step 3/4: the
+    fused chunks are pmean'd in place and decode_leaf runs ONCE on the
+    aggregated payload — decode∘mean = mean∘decode is exactly the paper's
+    Lemma 3 linearity.
+
 ``CollectiveStats`` sees the difference: reduce-pattern records stay flat in
 W, gather-pattern records carry ``fanout = data_size()`` so
 ``bytes_per_collective`` reports the W-scaled wire traffic — the honest
@@ -79,6 +121,10 @@ class CompressOut:
     recon: Any          # tree: reconstruction used for the error update
     state: Any          # tree: new compressor state (e.g. warm-start Q)
     bits_per_worker: int  # payload bits sent per step per model shard
+    metrics: Any = None   # optional dict of traced observability scalars
+    #   (e.g. PowerSGD's residual-energy ratios when
+    #   ``PowerSGDConfig.track_residual`` is on) — consumed by host-side
+    #   controllers such as :class:`repro.core.powersgd.RankController`
 
 
 def leaf_key(key: jax.Array, path) -> jax.Array:
@@ -284,6 +330,20 @@ class MatrixPayloads:
     the slabs — crop and scatter results back to the original tree.  Zero
     padding is exact through the power-iteration math (see
     ``core/matrixize.py``).
+
+    Adaptive rank: the rank is *not* a constructor constant — it is read
+    off each leaf's warm-start factor (``q.shape[-1]``), so payload shapes
+    follow whatever rank the active :class:`~repro.core.powersgd.
+    RankSchedule` (or the :mod:`repro.core.autotune` planner) last
+    installed into the state, with no re-plumbing.  Leaves sharing a shape
+    bucket must share a rank (bucket slabs stack their factors into one
+    ``(B, m, r)`` array); bucket membership is a pure function of matrix
+    shapes (:func:`repro.core.matrixize.plan_buckets` is deterministic), so
+    any per-bucket rank assignment made against the same plan — e.g. an
+    :func:`repro.core.autotune.autotune` plan — satisfies this by
+    construction.  The O(1)-collectives-per-step invariant is unaffected:
+    however ranks vary across buckets, each transport phase still fuses
+    all bucket factors into one flat chunk per wire dtype.
     """
 
     deltas: Any                      # the original tree (structure template)
@@ -291,21 +351,22 @@ class MatrixPayloads:
     leaves: list                     # (path, g, q, spec) in tree order
     plan: matrixize.BucketPlan
     m_bufs: List[jax.Array]          # per bucket: (B, n, m) matrix slab
-    q_bufs: List[jax.Array]          # per bucket: (B, m, r) factor slab
+    q_bufs: List[jax.Array]          # per bucket: (B, m, r_b) factor slab
     lshapes: list                    # per leaf: (batch_shape, n, m) or None
     unc_ids: List[int]               # leaves that travel uncompressed
-    rank: int
+    bucket_ranks: List[int]          # per bucket: its leaves' shared rank
     bits: int                        # analytic payload bits per worker
 
     @classmethod
-    def build(cls, deltas, state, specs, *, rank: int, dtype,
+    def build(cls, deltas, state, specs, *, dtype,
               tolerance: float = 0.25,
               resample_key: Optional[jax.Array] = None) -> "MatrixPayloads":
         """``resample_key`` replaces every warm-start factor with a fresh
-        i.i.d. normal draw (cold start), derived per leaf via
-        :func:`leaf_key`."""
+        i.i.d. normal draw (cold start, at the factor's own rank), derived
+        per leaf via :func:`leaf_key`."""
         leaves = collect_leaves(deltas, state, specs)
         mats, qs, plan_shapes, lshapes, unc_ids = [], [], [], [], []
+        ranks = {}
         floats = 0
         for i, (path, g, q, spec) in enumerate(leaves):
             ms = matrixize.matrix_shape(g.shape, spec) if q is not None else None
@@ -319,22 +380,34 @@ class MatrixPayloads:
                 continue
             batch_shape, n, m = ms
             count = math.prod(batch_shape) if batch_shape else 1
+            r = q.shape[-1]
+            ranks[i] = r
             mats.append(matrixize.to_matrix(g, spec)
                         .astype(dtype).reshape((count, n, m)))
             if resample_key is not None:
                 q = jax.random.normal(leaf_key(resample_key, path), q.shape,
                                       dtype=dtype)
-            qs.append(q.astype(dtype).reshape((count, m, rank)))
+            qs.append(q.astype(dtype).reshape((count, m, r)))
             plan_shapes.append((count, n, m))
             lshapes.append((batch_shape, n, m))
-            floats += matrixize.compressed_floats(g.shape, spec, rank)
+            floats += matrixize.compressed_floats(g.shape, spec, r)
 
         plan = matrixize.plan_buckets(plan_shapes, tolerance=tolerance)
+        bucket_ranks = []
+        for b in plan.buckets:
+            rs = {ranks[e.index] for e in b.entries}
+            if len(rs) != 1:
+                raise ValueError(
+                    "leaves sharing a shape bucket must share a rank "
+                    f"(bucket ({b.n}, {b.m}) has ranks {sorted(rs)}); "
+                    "assign ranks per bucket — see repro.core.autotune")
+            bucket_ranks.append(rs.pop())
         return cls(
             deltas=deltas, specs=specs, leaves=leaves, plan=plan,
             m_bufs=[matrixize.pack_matrices(b, mats) for b in plan.buckets],
             q_bufs=[matrixize.pack_factors(b, qs) for b in plan.buckets],
-            lshapes=lshapes, unc_ids=unc_ids, rank=rank, bits=floats * 32)
+            lshapes=lshapes, unc_ids=unc_ids, bucket_ranks=bucket_ranks,
+            bits=floats * 32)
 
     @property
     def unc_values(self) -> List[jax.Array]:
@@ -361,7 +434,7 @@ class MatrixPayloads:
                 return matrixize.from_matrix(mat, g.shape, spec).astype(g.dtype)
 
             new_q = matrixize.unpack_entry(q_bufs[b_id], entry, m)
-            new_q = new_q.reshape(batch_shape + (m, self.rank))
+            new_q = new_q.reshape(batch_shape + (m, self.bucket_ranks[b_id]))
             results.append((crop(agg_bufs[b_id]), crop(recon_bufs[b_id]),
                             new_q))
         return scatter_tree(self.deltas, self.specs, results,

@@ -71,6 +71,16 @@ def init_state(compressor: Compressor, params, specs, key: jax.Array) -> EFState
     )
 
 
+def replace_comp(state: EFState, comp) -> EFState:
+    """``state`` with a new compressor state — the rank-transition hook.
+
+    A :class:`~repro.core.powersgd.RankSchedule` switch replaces only the
+    warm-start factors; error buffers, momentum and the step counter pass
+    through bit-exactly (``tests/sim/test_rank_transitions.py`` pins this)."""
+    return EFState(error=state.error, momentum=state.momentum, comp=comp,
+                   step=state.step)
+
+
 def apply_updates(
     compressor: Compressor,
     params,
@@ -130,6 +140,10 @@ def apply_updates(
         step=state.step + 1,
     )
     aux = {"bits_per_worker": out.bits_per_worker}
+    if getattr(out, "metrics", None):
+        # compressor observability (e.g. PowerSGD residual-energy ratios
+        # when track_residual is on) — host-side RankControllers read these
+        aux.update(out.metrics)
     return new_params, new_state, aux
 
 

@@ -98,6 +98,16 @@ def from_matrix(mat: jax.Array, shape: Tuple[int, ...], spec: MatrixSpec) -> jax
 # Gram-Schmidt / Cholesky-QR (they add nothing to any column inner product).
 #
 # Planning is pure Python over static shapes — it happens once at trace time.
+#
+# Plans are deliberately RANK-AGNOSTIC: buckets are a function of the (n, m)
+# matrix shapes only, never of the compression rank.  That is what lets the
+# adaptive-rank subsystem (core/powersgd.py RankSchedule, core/autotune.py)
+# move ranks between steps — and assign *different* ranks to different
+# buckets — without invalidating any plan: the factor slabs
+# (pack_factors / unpack_entry with cols=None) carry whatever trailing rank
+# the state's Q factors have, and an offline autotune plan computed from the
+# same shapes re-derives the identical buckets by determinism.  Only the
+# per-call accounting (compressed_floats) takes a rank, per leaf.
 
 
 @dataclasses.dataclass(frozen=True)

@@ -49,12 +49,43 @@ iteration, independent of the number of weight matrices.  Zero padding is
 exact (padded rows/cols contribute exact zeros through both matmuls and the
 orthogonalizer), so the engine is numerically identical to the per-leaf path
 (``bucketing="off"``) up to float reassociation and any wire-dtype cast.
+
+Adaptive rank (:class:`RankSchedule`)
+-------------------------------------
+The rank is *state-carried*, not config-carried: every compress path reads
+each leaf's active rank off its warm-start factor (``q.shape[-1]``), so the
+payload shapes, the bits accounting and the engine's bucket slabs all
+follow whatever rank was last installed into the state.  ``cfg.rank`` only
+seeds :func:`init_state`.
+
+Rank changes are *host-level shape transitions* between jitted steps (XLA
+shapes are static per trace; a switch simply retraces):
+
+* :class:`RankSchedule` is the policy — :class:`FixedRank`,
+  :class:`StaircaseRank` (PowerSGD+-style step staircase) and
+  :class:`ResidualEnergyRank` (driven by the measured power-iteration
+  residual ‖M − P̂Qᵀ‖_F / ‖M‖_F, tracked per bucket when
+  ``cfg.track_residual`` is on).
+* :func:`transition_factor` / :func:`transition_state` implement the
+  warm-start-preserving switch: a rank *decrease* keeps the leading
+  columns of Q bit-exactly (the orthogonalizer's Gram–Schmidt order makes
+  those the dominant tracked directions); an *increase* keeps every
+  existing column bit-exactly and appends fresh i.i.d. normal columns for
+  the power iteration to absorb.  Error-feedback buffers are full-shape
+  trees and are not touched at all — preservation across a switch is
+  exact by construction (``tests/sim/test_rank_transitions.py``).
+* :class:`RankController` is the driver loop's one-liner: feed it the
+  step index (and the residual metric, for :class:`ResidualEnergyRank`)
+  and it returns the transitioned compressor state when the policy fires.
+
+The α-β autotuner (:mod:`repro.core.autotune`) builds on the same
+machinery to assign *per-bucket* ranks under a bits budget.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +102,9 @@ _leaf_key = engine.leaf_key
 
 @dataclasses.dataclass(frozen=True)
 class PowerSGDConfig:
-    rank: int = 2
+    rank: int = 2                          # *initial* rank — the live rank is
+    #                                        state-carried (q.shape[-1]) and may
+    #                                        be moved by a RankSchedule/autotuner
     orthogonalizer: str = "gram_schmidt"   # paper default; "cholesky_qr" = TPU opt
     warm_start: bool = True                # §4.2
     num_iters: int = 1                     # >1 ⇒ Appendix G.7 best-approximation
@@ -82,6 +115,278 @@ class PowerSGDConfig:
     bucket_pad_tolerance: float = 0.25     # max relative padding waste per bucket
     wire_dtype: str = "auto"               # fused-collective wire policy ("auto"|"float32"|"bfloat16")
     max_chunk_bytes: Optional[int] = None  # cap per fused wire buffer
+    track_residual: bool = False           # emit ‖M − P̂Qᵀ‖/‖M‖ metrics
+    #                                        (CompressOut.metrics; required by
+    #                                        ResidualEnergyRank)
+
+
+# ---------------------------------------------------------------------------
+# Rank schedules: fixed / staircase / residual-energy-driven
+# ---------------------------------------------------------------------------
+
+
+class RankSchedule:
+    """Policy deciding the active rank over training.
+
+    Rank is a *shape*, so schedules are evaluated host-side between jitted
+    steps (see module docstring): the training driver asks the schedule for
+    the rank of the upcoming step and applies :func:`transition_state` when
+    it differs from the current one — :class:`RankController` packages that
+    loop.  ``next_rank`` must be deterministic given its arguments so every
+    worker (and a resumed run) takes the same transition at the same step.
+    """
+
+    def initial_rank(self) -> int:
+        raise NotImplementedError
+
+    def next_rank(self, step: int, current: int,
+                  residual: Optional[float] = None) -> int:
+        """Active rank for step ``step``.  ``residual`` is the previous
+        step's measured residual-energy ratio (None when not tracked)."""
+        raise NotImplementedError
+
+    @property
+    def needs_residual(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedRank(RankSchedule):
+    """The paper's setting: one static rank for the whole run."""
+
+    rank: int = 2
+
+    def initial_rank(self) -> int:
+        return self.rank
+
+    def next_rank(self, step, current, residual=None) -> int:
+        return self.rank
+
+
+@dataclasses.dataclass(frozen=True)
+class StaircaseRank(RankSchedule):
+    """PowerSGD+-style step staircase: ``milestones`` is a sorted tuple of
+    ``(step, rank)`` pairs; the rank of step ``t`` is the one attached to
+    the last milestone with ``step <= t``.  The canonical use is
+    low-rank-early / high-rank-late (e.g. ``"1@0,2@50,4@100"``): early
+    gradients are noisy and the warm-started subspace is still forming, so
+    rank 1–2 loses nothing there — spend full rank only once gradient
+    structure is worth the bits.  Measured on the synthetic LM
+    (``benchmarks adaptive_rank_profile``): the 1→2→4 staircase sends ~42%
+    fewer cumulative compressed floats than fixed rank-4 at equal-or-better
+    final loss, while the *decay* staircase 4→2→1 loses to every fixed rank
+    — a mid-run rank drop injects reconstruction error the remaining steps
+    cannot re-absorb (see ``docs/tuning.md``)."""
+
+    milestones: Tuple[Tuple[int, int], ...] = ((0, 2),)
+
+    def __post_init__(self):
+        assert self.milestones and self.milestones[0][0] == 0, (
+            "first milestone must cover step 0", self.milestones)
+        steps = [s for s, _ in self.milestones]
+        assert steps == sorted(steps), ("milestones must be sorted",
+                                        self.milestones)
+        assert all(r >= 1 for _, r in self.milestones), self.milestones
+
+    def initial_rank(self) -> int:
+        return self.milestones[0][1]
+
+    def next_rank(self, step, current, residual=None) -> int:
+        rank = self.milestones[0][1]
+        for s, r in self.milestones:
+            if step >= s:
+                rank = r
+        return rank
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualEnergyRank(RankSchedule):
+    """Rank driven by the measured power-iteration residual.
+
+    The compressor (with ``track_residual=True``) reports
+    ρ = ‖M − P̂Qᵀ‖_F / ‖M‖_F each step.  Every ``every`` steps the policy
+    compares an exponential moving average of ρ against a hysteresis band:
+    ρ̄ > ``grow_above`` means the current rank leaves too much gradient
+    energy behind → double toward ``max_rank``; ρ̄ < ``shrink_below`` means
+    the subspace over-covers the gradient → halve toward ``min_rank``.
+    The EMA lives in :class:`RankController` (the schedule itself stays a
+    frozen value object)."""
+
+    min_rank: int = 1
+    max_rank: int = 8
+    init_rank: int = 4
+    shrink_below: float = 0.35
+    grow_above: float = 0.7
+    every: int = 10
+    ema: float = 0.8            # smoothing of the residual signal
+
+    def __post_init__(self):
+        assert 1 <= self.min_rank <= self.init_rank <= self.max_rank
+        assert 0.0 <= self.shrink_below < self.grow_above
+
+    def initial_rank(self) -> int:
+        return self.init_rank
+
+    @property
+    def needs_residual(self) -> bool:
+        return True
+
+    def next_rank(self, step, current, residual=None) -> int:
+        if residual is None or step == 0 or step % self.every:
+            return current
+        if residual > self.grow_above:
+            return min(current * 2, self.max_rank)
+        if residual < self.shrink_below:
+            return max(current // 2, self.min_rank)
+        return current
+
+
+def parse_schedule(spec) -> RankSchedule:
+    """Coerce a user-facing schedule spec into a :class:`RankSchedule`.
+
+    Accepted forms (the string ones are what ``TrainHyper.rank_schedule``
+    and the CLIs take):
+
+    * a ``RankSchedule`` — returned as-is,
+    * an int (or ``"4"``) — :class:`FixedRank`,
+    * ``"4@0,2@60,1@120"`` — :class:`StaircaseRank` (``rank@step`` pairs),
+    * ``"residual:min=1,max=8,init=4"`` — :class:`ResidualEnergyRank`
+      (keys: min, max, init, shrink, grow, every; all optional).
+    """
+    if isinstance(spec, RankSchedule):
+        return spec
+    if isinstance(spec, int):
+        return FixedRank(rank=spec)
+    if isinstance(spec, (tuple, list)):
+        return StaircaseRank(milestones=tuple((int(s), int(r))
+                                              for s, r in spec))
+    if not isinstance(spec, str):
+        raise TypeError(f"cannot parse rank schedule from {spec!r}")
+    s = spec.strip()
+    if s.startswith("residual"):
+        kw = {}
+        keymap = {"min": "min_rank", "max": "max_rank", "init": "init_rank",
+                  "shrink": "shrink_below", "grow": "grow_above",
+                  "every": "every", "ema": "ema"}
+        if ":" in s:
+            for item in s.split(":", 1)[1].split(","):
+                k, v = item.split("=")
+                field = keymap[k.strip()]
+                kw[field] = (float(v) if field in
+                             ("shrink_below", "grow_above", "ema")
+                             else int(v))
+        return ResidualEnergyRank(**kw)
+    if "@" in s:
+        pairs = []
+        for item in s.split(","):
+            r, at = item.split("@")
+            pairs.append((int(at), int(r)))
+        pairs.sort()
+        return StaircaseRank(milestones=tuple(pairs))
+    return FixedRank(rank=int(s))
+
+
+# ---------------------------------------------------------------------------
+# Warm-start-preserving rank transitions
+# ---------------------------------------------------------------------------
+
+
+def transition_factor(q: jax.Array, new_rank: int,
+                      key: jax.Array) -> jax.Array:
+    """Move one warm-start factor ``(..., m, r)`` to ``(..., m, new_rank)``.
+
+    Bit-consistency contract (pinned by ``tests/test_rank_schedule.py``):
+    the retained columns are *exactly* the old ones — truncation keeps the
+    leading ``new_rank`` columns (Gram–Schmidt orthogonalization processes
+    columns in order, so the leading columns carry the dominant tracked
+    directions), growth appends fresh i.i.d. N(0, 1) columns.  New columns
+    are drawn once with shape ``(m, extra)`` and broadcast over any leading
+    batch dims — layer-stack slices start from the same exploration
+    directions (one power-iteration step individualizes them), and, more
+    importantly, a stacked SimMesh worker dim stays bit-replicated.
+    (Host-side drivers should transition the *unreplicated* state anyway —
+    see :class:`RankController` — but broadcasting keeps the function safe
+    under any leading stacking.)
+    """
+    r = q.shape[-1]
+    if new_rank == r:
+        return q
+    if new_rank < r:
+        return q[..., :new_rank]
+    m = q.shape[-2]
+    cols = jax.random.normal(key, (m, new_rank - r), dtype=q.dtype)
+    cols = jnp.broadcast_to(cols, q.shape[:-2] + cols.shape)
+    return jnp.concatenate([q, cols], axis=-1)
+
+
+def transition_state(state, new_rank, key: jax.Array):
+    """Tree version of :func:`transition_factor` (None leaves pass through).
+
+    ``new_rank`` is an int (uniform switch — what a :class:`RankSchedule`
+    issues) or a tree of per-leaf ints/None aligned with ``state`` (what
+    :func:`repro.core.autotune.apply_plan` issues for per-bucket ranks; a
+    None rank leaves that factor untouched).  Per-leaf keys derive from the
+    tree path, so every worker computes identical new columns.
+    """
+    uniform = isinstance(new_rank, int)
+
+    def leaf(path, q, *rest):
+        if q is None:
+            return None
+        r = new_rank if uniform else rest[0]
+        if r is None:
+            return q
+        return transition_factor(q, int(r), _leaf_key(key, path))
+
+    if uniform:
+        return jax.tree_util.tree_map_with_path(
+            leaf, state, is_leaf=lambda x: x is None)
+    return jax.tree_util.tree_map_with_path(
+        leaf, state, new_rank, is_leaf=lambda x: x is None)
+
+
+class RankController:
+    """Host-side driver of a :class:`RankSchedule`.
+
+    Call :meth:`update` once per optimization step, *before* the jitted
+    step, with the upcoming step index (and the previous step's residual
+    metric for residual-driven schedules).  Returns the (possibly
+    transitioned) compressor state and whether a switch happened — a switch
+    changes factor shapes, so the jitted train step simply retraces.
+
+    Keeps the one piece of mutable policy state (the residual EMA) out of
+    the frozen schedule objects.
+    """
+
+    def __init__(self, schedule, key: Optional[jax.Array] = None):
+        self.schedule = parse_schedule(schedule)
+        self.key = jax.random.key(17) if key is None else key
+        self.rank = self.schedule.initial_rank()
+        self._ema: Optional[float] = None
+        self.history: list = [(0, self.rank)]  # (step, rank) switch log
+
+    def observe(self, residual: Optional[float]) -> Optional[float]:
+        if residual is None:
+            return self._ema
+        lam = getattr(self.schedule, "ema", 0.0)
+        self._ema = (float(residual) if self._ema is None
+                     else lam * self._ema + (1 - lam) * float(residual))
+        return self._ema
+
+    def update(self, comp_state, step: int,
+               residual: Optional[float] = None):
+        """-> (comp_state, changed).  ``comp_state`` must be unreplicated
+        (no stacked worker dim) so fresh columns are shared by construction;
+        re-replicate afterwards when driving a SimMesh run."""
+        ema = self.observe(residual)
+        new = int(self.schedule.next_rank(step, self.rank, ema))
+        if new == self.rank:
+            return comp_state, False
+        self.key, sub = jax.random.split(self.key)
+        comp_state = transition_state(comp_state, new, sub)
+        self.rank = new
+        self.history.append((step, new))
+        return comp_state, True
 
 
 def init_state(cfg: PowerSGDConfig, shapes, specs, key: jax.Array):
@@ -127,6 +432,7 @@ def compress_aggregate(
     orth = get_orthogonalizer(cfg.orthogonalizer)
     project, backproject = _matmuls(cfg)
     floats_sent = [0]
+    res_num, res_den = [], []  # per-leaf squared Frobenius norms (traced)
 
     def leaf(path, g, q, spec):
         if q is None:  # uncompressed (vector) leaf — paper's bias rule
@@ -152,7 +458,12 @@ def compress_aggregate(
             recon_mat = jnp.einsum("...nr,...mr->...nm", p_hat, q_local)
         else:
             recon_mat = agg_mat
-        floats_sent[0] += matrixize.compressed_floats(g.shape, spec, cfg.rank)
+        # active rank is state-carried: bits follow this leaf's factor
+        floats_sent[0] += matrixize.compressed_floats(g.shape, spec,
+                                                      q.shape[-1])
+        if cfg.track_residual:
+            res_num.append(jnp.sum(jnp.square(mat - agg_mat)))
+            res_den.append(jnp.sum(jnp.square(mat)))
 
         agg = matrixize.from_matrix(agg_mat, g.shape, spec).astype(g.dtype)
         recon = matrixize.from_matrix(recon_mat, g.shape, spec).astype(g.dtype)
@@ -165,7 +476,17 @@ def compress_aggregate(
     agg = jax.tree_util.tree_map(lambda t: t[0], triples, is_leaf=lambda x: isinstance(x, tuple))
     recon = jax.tree_util.tree_map(lambda t: t[1], triples, is_leaf=lambda x: isinstance(x, tuple))
     new_state = jax.tree_util.tree_map(lambda t: t[2], triples, is_leaf=lambda x: isinstance(x, tuple))
-    return PowerSGDOut(agg=agg, recon=recon, state=new_state, bits_per_worker=floats_sent[0] * 32)
+    metrics = None
+    if cfg.track_residual and res_num:
+        metrics = {"residual_ratio": _residual_ratio(sum(res_num),
+                                                     sum(res_den))}
+    return PowerSGDOut(agg=agg, recon=recon, state=new_state,
+                       bits_per_worker=floats_sent[0] * 32, metrics=metrics)
+
+
+def _residual_ratio(num_sq, den_sq):
+    """sqrt(Σ‖M − P̂Qᵀ‖² / Σ‖M‖²) with a guarded denominator."""
+    return jnp.sqrt(num_sq / jnp.maximum(den_sq, jnp.finfo(jnp.float32).tiny))
 
 
 def _compress_aggregate_bucketed(
@@ -192,8 +513,10 @@ def _compress_aggregate_bucketed(
     project, backproject = _matmuls(cfg)
     n_iter = max(1, cfg.num_iters)
 
+    # ranks are read off the state's factors (per bucket, possibly mixed —
+    # a RankSchedule or autotune plan moves them between steps)
     payloads = engine.MatrixPayloads.build(
-        deltas, state, specs, rank=cfg.rank, dtype=cfg.dtype,
+        deltas, state, specs, dtype=cfg.dtype,
         tolerance=cfg.bucket_pad_tolerance,
         resample_key=None if cfg.warm_start else key)
     transport = engine.Transport(ctx=ctx, wire_dtype=cfg.wire_dtype,
@@ -222,18 +545,49 @@ def _compress_aggregate_bucketed(
     else:
         recon_bufs = agg_bufs
 
+    metrics = None
+    if cfg.track_residual and payloads.m_bufs:
+        # per-bucket residual energy: the signal ResidualEnergyRank and the
+        # autotuner consume (padding contributes exact zeros to both norms)
+        nums = [jnp.sum(jnp.square(mb - ab))
+                for mb, ab in zip(payloads.m_bufs, agg_bufs)]
+        dens = [jnp.sum(jnp.square(mb)) for mb in payloads.m_bufs]
+        metrics = {
+            "residual_ratio": _residual_ratio(sum(nums), sum(dens)),
+            "bucket_residual_ratio": jnp.stack(
+                [_residual_ratio(n_, d_) for n_, d_ in zip(nums, dens)]),
+        }
+
     agg, recon, new_state = payloads.scatter(agg_bufs, recon_bufs, q_bufs,
                                              unc_agg)
     return PowerSGDOut(agg=agg, recon=recon, state=new_state,
-                       bits_per_worker=payloads.bits)
+                       bits_per_worker=payloads.bits, metrics=metrics)
 
 
-def compressed_floats_total(shapes, specs, rank: int) -> int:
-    """Analytic bytes-per-all-reduce accounting (paper Tables 3/10/11)."""
+def compressed_floats_total(shapes, specs, rank) -> int:
+    """Analytic bytes-per-all-reduce accounting (paper Tables 3/10/11).
+
+    ``rank`` is an int (the paper's static-rank setting) *or* a compressor
+    state tree aligned with ``shapes`` (per-leaf Q factors, or None for
+    uncompressed leaves): with a state tree each leaf is charged at its own
+    active rank — the honest accounting once a :class:`RankSchedule` or the
+    autotuner has moved ranks per bucket.
+    """
     total = [0]
 
-    def leaf(shape_leaf, spec):
-        total[0] += matrixize.compressed_floats(tuple(shape_leaf.shape), spec, rank)
+    if isinstance(rank, int):
+        def leaf(shape_leaf, spec):
+            total[0] += matrixize.compressed_floats(
+                tuple(shape_leaf.shape), spec, rank)
 
-    jax.tree_util.tree_map(leaf, shapes, specs)
+        jax.tree_util.tree_map(leaf, shapes, specs)
+        return total[0]
+
+    def leaf_state(shape_leaf, spec, q):
+        r = 0 if q is None else q.shape[-1]
+        total[0] += matrixize.compressed_floats(
+            tuple(shape_leaf.shape), spec, r)
+
+    jax.tree_util.tree_map(leaf_state, shapes, specs, rank,
+                           is_leaf=lambda x: x is None)
     return total[0]

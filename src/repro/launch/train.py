@@ -43,6 +43,12 @@ class TrainHyper:
     bucketing: str = "auto"         # "auto"/"on" = batched engine, "off" = per-leaf
     wire_dtype: str = "auto"        # fused-collective wire policy ("auto"|"float32"|"bfloat16")
     start_compress_step: int = 0    # dense warmup steps before compression kicks in
+    rank_schedule: Optional[str] = None  # adaptive-rank spec ("4@0,2@60",
+    #   "residual:min=1,max=8", ...; see repro.core.powersgd.parse_schedule).
+    #   The schedule is *driven by the host loop* (rank = factor shape, so a
+    #   switch retraces the jitted step): build a RankController from the
+    #   compressor and transition ef.comp between steps — see main() below.
+    track_residual: bool = False    # emit residual_ratio in the step metrics
 
 
 def _schedule(hyper: TrainHyper, step):
@@ -67,7 +73,8 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
         compressor = PowerSGDCompressor(
             rank=hyper.rank, orthogonalizer=hyper.orthogonalizer,
             use_pallas=hyper.use_pallas, bucketing=hyper.bucketing,
-            wire_dtype=hyper.wire_dtype)
+            wire_dtype=hyper.wire_dtype, rank_schedule=hyper.rank_schedule,
+            track_residual=hyper.track_residual)
 
     param_ps = model.pspecs(cfg)
     mspec_tree = model.mspecs(cfg)
@@ -98,6 +105,8 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
             error=jax.tree_util.tree_map(lambda e: e[None], new_state.error),
             momentum=new_state.momentum, comp=new_state.comp,
             step=new_state.step)
+        if "residual_ratio" in aux:  # host-side RankControllers read this
+            metrics["residual_ratio"] = aux["residual_ratio"]
         metrics = {k: lax.pmean(v, all_axes) for k, v in metrics.items()}
         metrics["lr"] = lr
         return new_params, new_state, metrics
@@ -194,7 +203,8 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
         compressor = PowerSGDCompressor(
             rank=hyper.rank, orthogonalizer=hyper.orthogonalizer,
             use_pallas=hyper.use_pallas, bucketing=hyper.bucketing,
-            wire_dtype=hyper.wire_dtype)
+            wire_dtype=hyper.wire_dtype, rank_schedule=hyper.rank_schedule,
+            track_residual=hyper.track_residual)
     mspec_tree = model.mspecs(cfg)
 
     def worker_step(params, ef_state, batch, key, weight):
@@ -219,6 +229,8 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
         # metrics aggregate through the backend directly: they are
         # observability, not gradient traffic, and must not perturb the
         # CollectiveStats 2-collectives-per-step invariant
+        if "residual_ratio" in aux:  # host-side RankControllers read this
+            metrics["residual_ratio"] = aux["residual_ratio"]
         metrics = {k: ctx.backend.pmean(v, ctx.data_axes)
                    for k, v in metrics.items()}
         metrics["lr"] = lr
@@ -270,6 +282,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--rank", type=int, default=2)
+    ap.add_argument("--rank-schedule", default=None,
+                    help="adaptive-rank spec, e.g. '4@0,2@60,1@120' or "
+                         "'residual:min=1,max=8,init=4' (see "
+                         "repro.core.powersgd.parse_schedule)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--ckpt-dir", default=None)
@@ -285,8 +301,14 @@ def main():
         m = jax.make_mesh((1, 1), ("data", "model"))
 
     hyper = TrainHyper(lr=args.lr, rank=args.rank, q_chunk=64,
-                       warmup_steps=20, remat=False)
-    step_fn, _, init_state = make_train_step(cfg, m, hyper)
+                       warmup_steps=20, remat=False,
+                       rank_schedule=args.rank_schedule)
+    compressor = PowerSGDCompressor(
+        rank=args.rank, rank_schedule=args.rank_schedule)
+    step_fn, _, init_state = make_train_step(cfg, m, hyper,
+                                             compressor=compressor)
+    controller = (compressor.controller()
+                  if compressor.rank_schedule is not None else None)
 
     key = jax.random.key(0)
     with jax.set_mesh(m):
@@ -295,10 +317,20 @@ def main():
     it = data.batches(args.batch, args.seq)
 
     t0 = time.time()
+    residual = None
     for i in range(args.steps):
+        if controller is not None:
+            # host-level rank transition: a switch changes the factor
+            # shapes, and the jitted step simply retraces
+            new_comp, changed = controller.update(ef.comp, i, residual)
+            if changed:
+                ef = error_feedback.replace_comp(ef, new_comp)
+                print(f"step {i:4d} rank -> {controller.rank}")
         batch = {k: jnp.asarray(v) for k, v in next(it).items()}
         with jax.set_mesh(m):
             params, ef, metrics = step_fn(params, ef, batch, key)
+        if "residual_ratio" in metrics:
+            residual = float(metrics["residual_ratio"])
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss={float(metrics['lm_loss']):.4f} "
                   f"lr={float(metrics['lr']):.4f} ({time.time()-t0:.1f}s)")

@@ -18,16 +18,20 @@ KEY = jax.random.key(0)
 
 def sim_train(arch="llama3-8b", workers=1, steps=3, batch=8, seq=32,
               weights_for_step=None, stats=None, hyper=None, data=None,
-              compressor=None, shard_fn=None):
+              compressor=None, shard_fn=None, controller=None):
     """Run ``steps`` of the W-worker EF-PowerSGD sim train step.
 
     ``weights_for_step(step) -> (W,) array or None`` injects per-round
     scenario weights (dropout / heterogeneous batches / stragglers).
     ``shard_fn(batch) -> stacked batch`` overrides the default even split
     (``sim.shard``), e.g. to stack heterogeneous per-worker shards.
-    Returns ``(losses, params_w0, sim, (params, ef))`` — ``losses`` is the
-    per-step worker-aggregated lm_loss, ``params_w0`` is worker 0's final
-    params as numpy.
+    ``controller`` (:class:`repro.core.powersgd.RankController`) drives an
+    adaptive-rank schedule: consulted before each step with the previous
+    step's residual metric; a switch transitions worker 0's (replicated)
+    compressor state and re-replicates, so every worker takes the identical
+    transition.  Returns ``(losses, params_w0, sim, (params, ef))`` —
+    ``losses`` is the per-step worker-aggregated lm_loss, ``params_w0`` is
+    worker 0's final params as numpy.
     """
     cfg = get_config(arch, reduced=True)
     if hyper is None:
@@ -44,11 +48,22 @@ def sim_train(arch="llama3-8b", workers=1, steps=3, batch=8, seq=32,
     it = data.batches(batch, seq)
     params, ef = init_state(KEY)
     losses = []
+    residual = None
     for i in range(steps):
+        if controller is not None:
+            from repro.core.error_feedback import EFState
+
+            comp_w0 = jax.tree_util.tree_map(lambda x: x[0], ef.comp)
+            new_comp, changed = controller.update(comp_w0, i, residual)
+            if changed:
+                ef = EFState(error=ef.error, momentum=ef.momentum,
+                             comp=sim.replicate(new_comp), step=ef.step)
         b = shard_fn({k: jnp.asarray(v) for k, v in next(it).items()})
         w = weights_for_step(i) if weights_for_step is not None else None
         params, ef, met = step_fn(params, ef, b, KEY, w)
         losses.append(float(met["lm_loss"][0]))
+        if "residual_ratio" in met:
+            residual = float(met["residual_ratio"][0])
     params_w0 = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
     return losses, params_w0, sim, (params, ef)
 

@@ -1,0 +1,226 @@
+"""The α-β autotuner (core/autotune.py): budget feasibility, the greedy
+per-bucket rank assignment, wire-policy selection, plan application, and —
+the CI smoke — the collective-budget invariant under a tuned (mixed-rank)
+configuration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, matrixize, powersgd
+from repro.core.dist import CollectiveStats, MeshCtx
+
+KEY = jax.random.key(0)
+
+
+def _tree():
+    specs = {"big": matrixize.MatrixSpec("matrix", 0),
+             "big2": matrixize.MatrixSpec("matrix", 0),
+             "small": matrixize.MatrixSpec("matrix", 0),
+             "v": matrixize.NONE}
+    shapes = {"big": jax.ShapeDtypeStruct((256, 128), jnp.float32),
+              "big2": jax.ShapeDtypeStruct((250, 128), jnp.float32),
+              "small": jax.ShapeDtypeStruct((16, 8), jnp.float32),
+              "v": jax.ShapeDtypeStruct((64,), jnp.float32)}
+    return shapes, specs
+
+
+def _budget(shapes, specs, rank):
+    return powersgd.compressed_floats_total(shapes, specs, rank) * 32
+
+
+# ---------------------------------------------------------------------------
+# hardware model
+# ---------------------------------------------------------------------------
+
+def test_hardware_model_sources():
+    hw = autotune.HardwareModel.from_roofline()
+    assert hw.bw == pytest.approx(50e9)
+    nccl = autotune.HardwareModel.from_backend("nccl_10gbit")
+    gloo = autotune.HardwareModel.from_backend("gloo_10gbit")
+    assert nccl.bw > gloo.bw and nccl.alpha < gloo.alpha
+
+
+def test_collective_time_shapes():
+    hw = autotune.HardwareModel(alpha=1e-5, bw=1e9)
+    assert hw.collective_time(1e6, 1) == 0.0
+    r4, r8 = (hw.collective_time(1e6, w, "reduce") for w in (4, 8))
+    assert 0 < r4 < r8 < 2 * 1e6 / 1e9 + 1e-3  # bounded by 2·bytes/bw + α
+    # gather pays the (W−1)-fold receive traffic
+    assert hw.collective_time(1e6, 8, "gather") > r8
+
+
+def test_comm_time_from_stats_matches_model():
+    hw = autotune.HardwareModel.from_backend("nccl_10gbit")
+    stats = CollectiveStats()
+    stats.record(1000, itemsize=4, kind="reduce")
+    stats.record(500, itemsize=2, kind="gather", fanout=8)
+    want = (hw.collective_time(4000, 8, "reduce")
+            + hw.collective_time(1000, 8, "gather"))
+    assert autotune.comm_time_from_stats(stats, 8, hw) == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+
+def test_budget_respected_and_decisions_cover_buckets():
+    shapes, specs = _tree()
+    budget = _budget(shapes, specs, 4)
+    plan = autotune.autotune(shapes, specs, bits_budget=budget, workers=8)
+    unc = plan.uncompressed_floats
+    assert plan.payload_floats * 32 <= budget - unc * 32
+    assert plan.bits_per_step == (plan.payload_floats + unc) * 32
+    assert len(plan.decisions) >= 2          # big bucket + small bucket
+    assert len(plan.leaf_ranks) == 4
+    assert plan.leaf_ranks[list(shapes).index("v")] is None
+
+
+def test_bigger_budget_never_lowers_ranks():
+    shapes, specs = _tree()
+    lo = autotune.autotune(shapes, specs,
+                           bits_budget=_budget(shapes, specs, 2), workers=8)
+    hi = autotune.autotune(shapes, specs,
+                           bits_budget=_budget(shapes, specs, 8), workers=8)
+    assert hi.payload_floats >= lo.payload_floats
+    for dl, dh in zip(lo.decisions, hi.decisions):
+        assert dh.rank >= dl.rank
+
+
+def test_infeasible_budget_degrades_to_min_rank():
+    shapes, specs = _tree()
+    plan = autotune.autotune(shapes, specs, bits_budget=1, workers=8,
+                             ranks=(1, 2, 4))
+    assert all(d.rank == 1 for d in plan.decisions)
+
+
+def test_wire_dtype_selection_prefers_cheaper_wire():
+    shapes, specs = _tree()
+    budget = _budget(shapes, specs, 4)
+    both = autotune.autotune(shapes, specs, bits_budget=budget, workers=8,
+                             wire_dtypes=("float32", "bfloat16"))
+    f32 = autotune.autotune(shapes, specs, bits_budget=budget, workers=8,
+                            wire_dtypes=("float32",))
+    assert both.wire_dtype == "bfloat16"     # half the β term
+    assert f32.wire_dtype == "float32"
+    assert both.predicted_comm_s < f32.predicted_comm_s
+    # same bits accounting either way: the budget is payload bits, not wire
+    assert both.bits_per_step == f32.bits_per_step
+    with pytest.raises(ValueError):
+        autotune.autotune(shapes, specs, bits_budget=budget, workers=8,
+                          wire_dtypes=("auto",))
+
+
+def test_max_chunk_bytes_candidates_add_latency_only():
+    shapes, specs = _tree()
+    budget = _budget(shapes, specs, 4)
+    plan = autotune.autotune(
+        shapes, specs, bits_budget=budget, workers=8,
+        max_chunk_bytes_options=(None, 4096))
+    # with no pipelining in the α-β model, splitting only adds α rounds
+    assert plan.max_chunk_bytes is None
+
+
+def test_single_worker_predicts_zero_comm():
+    shapes, specs = _tree()
+    plan = autotune.autotune(shapes, specs,
+                             bits_budget=_budget(shapes, specs, 4), workers=1)
+    assert plan.predicted_comm_s == 0.0
+
+
+def test_measured_residuals_steer_the_walk_down():
+    """A bucket whose measured residual is ~0 (subspace already covers its
+    gradients) must be cut before one that is starved."""
+    shapes, specs = _tree()
+    budget = _budget(shapes, specs, 3)  # forces some bucket below max
+    n_buckets = len(autotune.autotune(shapes, specs, bits_budget=budget,
+                                      workers=8).decisions)
+    assert n_buckets >= 2
+    # big bucket saturated (residual 1.0), others covered (0.0)
+    residuals = [1.0] + [0.0] * (n_buckets - 1)
+    plan = autotune.autotune(shapes, specs, bits_budget=budget, workers=8,
+                             bucket_residuals=residuals)
+    ranks = [d.rank for d in plan.decisions]
+    assert ranks[0] == max(ranks), ranks
+
+
+def test_rank_capped_at_compressive_bound_per_bucket():
+    """No bucket may be assigned a rank above min(n, m) or above the point
+    where r·(n+m) exceeds n·m — 'compression' that beats sending dense."""
+    specs = {"tiny": matrixize.MatrixSpec("matrix", 0),
+             "big": matrixize.MatrixSpec("matrix", 0)}
+    shapes = {"tiny": jax.ShapeDtypeStruct((16, 4), jnp.float32),
+              "big": jax.ShapeDtypeStruct((256, 128), jnp.float32)}
+    plan = autotune.autotune(shapes, specs, bits_budget=10**9, workers=8,
+                             ranks=(1, 2, 4, 8))
+    for d in plan.decisions:
+        for e_rank, n, m in [(d.rank, d.n, d.m)]:
+            assert e_rank <= min(n, m)
+            assert e_rank * (n + m) <= n * m, (d, "worse than dense")
+
+
+def test_plan_tolerance_threads_into_tuned_compressor():
+    """A plan computed at a non-default tolerance must hand the engine the
+    same tolerance, or the engine's own bucket plan diverges and mixes
+    ranks inside a bucket (ValueError at the first step)."""
+    specs = {f"l{i}/w": matrixize.MatrixSpec("matrix", 0) for i in range(2)}
+    shapes = {"l0/w": jax.ShapeDtypeStruct((32, 16), jnp.float32),
+              "l1/w": jax.ShapeDtypeStruct((30, 16), jnp.float32)}
+    plan = autotune.autotune(shapes, specs, bits_budget=10**9, workers=8,
+                             tolerance=0.0)
+    comp = autotune.make_tuned_compressor(plan)
+    assert comp.cfg.bucket_pad_tolerance == 0.0
+    state = autotune.apply_plan(plan, comp.init(shapes, specs, KEY),
+                                shapes, specs, KEY)
+    grads = jax.tree_util.tree_map(
+        lambda s: jax.random.normal(KEY, s.shape, s.dtype), shapes)
+    out = comp.step(grads, state, specs, key=KEY)  # must not raise
+    assert out.bits_per_worker == plan.bits_per_step
+
+
+def test_deterministic():
+    shapes, specs = _tree()
+    kw = dict(bits_budget=_budget(shapes, specs, 4), workers=8)
+    a = autotune.autotune(shapes, specs, **kw)
+    b = autotune.autotune(shapes, specs, **kw)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# applying a plan to a live compressor (the CI autotuner smoke)
+# ---------------------------------------------------------------------------
+
+def test_apply_plan_installs_ranks_and_budget_guard_holds():
+    """End-to-end: tune under a budget, install the per-bucket ranks with
+    warm-start-preserving transitions, and verify the engine still issues
+    ≤ 2 fused data collectives with the mixed-rank state — the autotuner
+    variant of the CI collective-budget regression guard."""
+    shapes, specs = _tree()
+    plan = autotune.autotune(shapes, specs,
+                             bits_budget=_budget(shapes, specs, 4) // 2,
+                             workers=16)
+    comp = autotune.make_tuned_compressor(plan)
+    state = comp.init(shapes, specs, KEY)
+    state2 = autotune.apply_plan(plan, state, shapes, specs, KEY)
+
+    rank_tree = plan.rank_tree(shapes, specs)
+    for k, r in rank_tree.items():
+        if r is None:
+            continue
+        assert state2[k].shape[-1] == r
+        keep = min(r, state[k].shape[-1])
+        np.testing.assert_array_equal(            # bit-exact warm start
+            np.asarray(state2[k][..., :keep]),
+            np.asarray(state[k][..., :keep]))
+
+    grads = jax.tree_util.tree_map(
+        lambda s: jax.random.normal(KEY, s.shape, s.dtype), shapes)
+    stats = CollectiveStats()
+    out = comp.step(grads, state2, specs, ctx=MeshCtx(stats=stats), key=KEY)
+    assert stats.data_collectives <= 2, stats.sizes
+    assert stats.gather_collectives == 0
+    assert out.bits_per_worker == plan.bits_per_step
+    # explicit wire dtype ⇒ the chunks actually travel at that itemsize
+    assert set(stats.itemsizes) == \
+        {2 if plan.wire_dtype == "bfloat16" else 4}

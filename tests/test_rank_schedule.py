@@ -1,0 +1,234 @@
+"""The adaptive-rank subsystem (core/powersgd.py): schedule policies,
+warm-start-preserving transitions, state-carried rank in both compress
+paths, and the bits accounting following the active ranks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, matrixize, powersgd
+from repro.core.compressors import PowerSGDCompressor
+from repro.core.dist import CollectiveStats, MeshCtx
+from repro.core.powersgd import (FixedRank, PowerSGDConfig, RankController,
+                                 ResidualEnergyRank, StaircaseRank,
+                                 parse_schedule, transition_factor,
+                                 transition_state)
+
+KEY = jax.random.key(0)
+
+
+# ---------------------------------------------------------------------------
+# schedule policies + parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_schedule_forms():
+    assert parse_schedule(4) == FixedRank(rank=4)
+    assert parse_schedule("4") == FixedRank(rank=4)
+    assert parse_schedule("4@0,2@60,1@120") == StaircaseRank(
+        milestones=((0, 4), (60, 2), (120, 1)))
+    assert parse_schedule([(0, 4), (10, 2)]) == StaircaseRank(
+        milestones=((0, 4), (10, 2)))
+    r = parse_schedule("residual:min=1,max=16,init=4,every=5")
+    assert r == ResidualEnergyRank(min_rank=1, max_rank=16, init_rank=4,
+                                   every=5)
+    sched = parse_schedule(StaircaseRank(milestones=((0, 3),)))
+    assert isinstance(sched, StaircaseRank)
+    with pytest.raises(TypeError):
+        parse_schedule(None)
+
+
+def test_staircase_rank_at_steps():
+    s = StaircaseRank(milestones=((0, 4), (60, 2), (120, 1)))
+    assert s.initial_rank() == 4
+    assert [s.next_rank(t, 4) for t in (0, 59, 60, 119, 120, 999)] == \
+        [4, 4, 2, 2, 1, 1]
+
+
+def test_staircase_rejects_uncovered_step_zero():
+    with pytest.raises(AssertionError):
+        StaircaseRank(milestones=((10, 4),))
+
+
+def test_residual_energy_hysteresis():
+    s = ResidualEnergyRank(min_rank=1, max_rank=8, init_rank=2,
+                           shrink_below=0.3, grow_above=0.7, every=5)
+    # off-cadence steps and missing residuals never move the rank
+    assert s.next_rank(3, 2, 0.9) == 2
+    assert s.next_rank(5, 2, None) == 2
+    # in-band residual holds, outside the band doubles/halves
+    assert s.next_rank(5, 2, 0.5) == 2
+    assert s.next_rank(5, 2, 0.9) == 4
+    assert s.next_rank(5, 8, 0.9) == 8      # clamped at max
+    assert s.next_rank(5, 2, 0.1) == 1
+    assert s.next_rank(5, 1, 0.1) == 1      # clamped at min
+
+
+def test_rank_controller_staircase_transitions():
+    state = {"w": jax.random.normal(KEY, (16, 4)), "b": None}
+    ctl = RankController("4@0,2@3,1@6")
+    ranks = []
+    for step in range(8):
+        state, _ = ctl.update(state, step)
+        ranks.append(state["w"].shape[-1])
+    assert ranks == [4, 4, 4, 2, 2, 2, 1, 1]
+    assert ctl.history == [(0, 4), (3, 2), (6, 1)]
+
+
+def test_rank_controller_residual_driven():
+    state = {"w": jax.random.normal(KEY, (16, 2))}
+    ctl = RankController(ResidualEnergyRank(min_rank=1, max_rank=8,
+                                            init_rank=2, every=1, ema=0.0))
+    state, changed = ctl.update(state, 1, residual=0.9)  # starved: grow
+    assert changed and state["w"].shape[-1] == 4
+    state, changed = ctl.update(state, 2, residual=0.05)  # over-covered
+    assert changed and state["w"].shape[-1] == 2
+
+
+# ---------------------------------------------------------------------------
+# warm-start-preserving transitions (the bit-consistency contract)
+# ---------------------------------------------------------------------------
+
+def test_transition_truncate_keeps_leading_columns_bitexact():
+    q = jax.random.normal(KEY, (3, 16, 4))  # leading layer-stack dim
+    q2 = transition_factor(q, 2, KEY)
+    assert q2.shape == (3, 16, 2)
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q[..., :2]))
+
+
+def test_transition_grow_keeps_existing_columns_bitexact():
+    q = jax.random.normal(KEY, (16, 2))
+    q2 = transition_factor(q, 5, KEY)
+    assert q2.shape == (16, 5)
+    np.testing.assert_array_equal(np.asarray(q2[:, :2]), np.asarray(q))
+    # fresh columns are non-degenerate exploration directions
+    assert float(jnp.abs(q2[:, 2:]).max()) > 0
+
+
+def test_transition_grow_broadcasts_over_leading_dims():
+    """New columns are drawn once and broadcast over stacking dims, so a
+    replicated (e.g. SimMesh worker) leading axis stays bit-replicated."""
+    q = jnp.broadcast_to(jax.random.normal(KEY, (16, 2))[None], (4, 16, 2))
+    q2 = np.asarray(transition_factor(q, 4, KEY))
+    assert (q2 == q2[:1]).all()
+
+
+def test_transition_noop_returns_same_object():
+    q = jax.random.normal(KEY, (16, 3))
+    assert transition_factor(q, 3, KEY) is q
+
+
+def test_transition_state_uniform_and_per_leaf():
+    state = {"a": jax.random.normal(KEY, (8, 4)),
+             "b": jax.random.normal(KEY, (6, 4)),
+             "v": None}
+    uni = transition_state(state, 2, KEY)
+    assert uni["a"].shape == (8, 2) and uni["b"].shape == (6, 2)
+    assert uni["v"] is None
+    per = transition_state(state, {"a": 1, "b": None, "v": None}, KEY)
+    assert per["a"].shape == (8, 1)
+    assert per["b"] is state["b"]          # None rank = leave untouched
+
+
+# ---------------------------------------------------------------------------
+# state-carried rank through both compress paths
+# ---------------------------------------------------------------------------
+
+def _tree():
+    grads = {"a": jax.random.normal(KEY, (24, 16)),
+             "b": jax.random.normal(jax.random.fold_in(KEY, 1), (23, 16)),
+             "c": jax.random.normal(jax.random.fold_in(KEY, 2), (64, 32)),
+             "v": jnp.ones((16,))}
+    specs = {k: matrixize.default_spec(v) for k, v in grads.items()}
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
+    return grads, specs, shapes
+
+
+@pytest.mark.parametrize("bucketing", ["auto", "off"])
+def test_bits_follow_state_ranks(bucketing):
+    grads, specs, shapes = _tree()
+    cfg = PowerSGDConfig(rank=4, bucketing=bucketing)
+    state = powersgd.init_state(cfg, shapes, specs, KEY)
+    out4 = powersgd.compress_aggregate(cfg, grads, state, specs)
+    assert out4.bits_per_worker == \
+        powersgd.compressed_floats_total(shapes, specs, 4) * 32
+    # rank switch: same cfg object, bits follow the transitioned state
+    state2 = transition_state(state, 2, KEY)
+    out2 = powersgd.compress_aggregate(cfg, grads, state2, specs)
+    assert out2.bits_per_worker == \
+        powersgd.compressed_floats_total(shapes, specs, 2) * 32
+    assert out2.bits_per_worker < out4.bits_per_worker
+
+
+def test_mixed_per_bucket_ranks_bucketed_matches_per_leaf():
+    """Different buckets at different ranks: the fused engine must match the
+    per-leaf reference path at every leaf."""
+    grads, specs, shapes = _tree()
+    cfg = PowerSGDConfig(rank=4, bucketing="auto", bucket_pad_tolerance=0.25)
+    state = powersgd.init_state(cfg, shapes, specs, KEY)
+    # a/b share the (24,16)-ish bucket -> rank 2; c alone -> rank 4
+    ranks = {"a": 2, "b": 2, "c": 4, "v": None}
+    state = transition_state(state, ranks, KEY)
+
+    out = powersgd.compress_aggregate(cfg, grads, state, specs)
+    cfg_ref = powersgd.PowerSGDConfig(rank=4, bucketing="off")
+    ref = powersgd.compress_aggregate(cfg_ref, grads, state, specs)
+    for k in grads:
+        np.testing.assert_allclose(np.asarray(out.agg[k]),
+                                   np.asarray(ref.agg[k]), atol=1e-5)
+    for k, r in ranks.items():
+        if r is not None:
+            assert out.state[k].shape[-1] == r
+    assert out.bits_per_worker == ref.bits_per_worker == \
+        powersgd.compressed_floats_total(shapes, specs, state) * 32
+
+
+def test_mixed_ranks_inside_one_bucket_rejected():
+    grads, specs, shapes = _tree()
+    cfg = PowerSGDConfig(rank=4, bucketing="auto")
+    state = powersgd.init_state(cfg, shapes, specs, KEY)
+    state = transition_state(state, {"a": 2, "b": 4, "c": 4, "v": None}, KEY)
+    with pytest.raises(ValueError, match="share a rank"):
+        powersgd.compress_aggregate(cfg, grads, state, specs)
+
+
+def test_compressed_floats_total_state_tree():
+    grads, specs, shapes = _tree()
+    cfg = PowerSGDConfig(rank=3)
+    state = powersgd.init_state(cfg, shapes, specs, KEY)
+    assert powersgd.compressed_floats_total(shapes, specs, state) == \
+        powersgd.compressed_floats_total(shapes, specs, 3)
+
+
+def test_residual_metrics_reported_and_shrink_with_rank():
+    """track_residual emits the ‖M−P̂Qᵀ‖/‖M‖ signal; more rank captures more
+    energy, so the ratio must fall as rank grows."""
+    grads, specs, shapes = _tree()
+    ratios = {}
+    for r in (1, 8):
+        cfg = PowerSGDConfig(rank=r, track_residual=True)
+        state = powersgd.init_state(cfg, shapes, specs, KEY)
+        out = powersgd.compress_aggregate(cfg, grads, state, specs)
+        assert out.metrics is not None
+        assert out.metrics["bucket_residual_ratio"].shape[0] >= 1
+        ratios[r] = float(out.metrics["residual_ratio"])
+        assert 0.0 <= ratios[r] <= 1.5
+    assert ratios[8] < ratios[1]
+
+
+def test_transition_then_compress_keeps_two_collective_budget():
+    """The collective-budget guard with a schedule active: every stage of a
+    staircase stays within the fused engine's 2-collectives-per-step."""
+    grads, specs, shapes = _tree()
+    comp = PowerSGDCompressor(rank_schedule="4@0,2@2,1@4")
+    state = comp.init(shapes, specs, KEY)
+    ctl = comp.controller()
+    for step in range(6):
+        state, _ = ctl.update(state, step)
+        stats = CollectiveStats()
+        out = comp.step(grads, state, specs, ctx=MeshCtx(stats=stats),
+                        key=KEY)
+        state = out.state
+        assert stats.data_collectives <= 2, (step, stats.sizes)
+    assert state["a"].shape[-1] == 1

@@ -226,6 +226,178 @@ def train_lm(compressor: Compressor, spec: LMSpec = LMSpec(),
 
 
 # ---------------------------------------------------------------------------
+# fault-tolerant resume: overhead + what dropping each state piece costs
+# ---------------------------------------------------------------------------
+
+
+def resume_profile(spec: LMSpec, ckpt_dir: str, ckpt_every: int = 20) -> list:
+    """Measure the full-state checkpoint subsystem on the benchmark LM.
+
+    Runs the W-worker SimMesh trainer (the same ``make_sim_train_step`` +
+    ``repro.checkpoint.train_state`` path the CLI resume uses) and reports:
+
+    * per-checkpoint cost — envelope size, save / restore wall time, and
+      the save overhead as a fraction of train wall time at ``ckpt_every``;
+    * the kill/resume ablation — from a checkpoint at 80% of the horizon
+      (the realistic preemption point; an earlier kill lets the tail
+      re-absorb the damage below measurability), continue four ways:
+      uninterrupted (reference), ``resume_full``
+      (must be **bit-exact**: identical per-step losses), and the two
+      degraded restores the docs quote — ``resume_drop_ef`` (error buffers
+      zeroed: Alg. 1's accumulated feedback discarded) and
+      ``resume_drop_warm_start`` (Q factors re-randomized: §3's warm start
+      restarted) — quantifying why EF memory and warm-start factors are
+      algorithm state, not derivable caches.
+    """
+    import os
+
+    from repro.checkpoint import (TrainState, canonicalize_sim,
+                                  replicate_sim, restore_train_state,
+                                  save_train_state)
+    from repro.core.compressors import PowerSGDCompressor
+    from repro.core.simmesh import SimMesh
+    from repro.launch.train import TrainHyper, make_sim_train_step
+    from repro.models import model as model_lib
+
+    cfg = _make_cfg(spec)
+    sim = SimMesh(spec.workers)
+    key = jax.random.key(spec.seed)
+    hyper = TrainHyper(lr=spec.lr, momentum=spec.momentum, q_chunk=32,
+                       warmup_steps=20, remat=False, weight_decay=0.0)
+
+    def build():
+        """A fresh 'process': new compressor instance, new jitted step."""
+        return make_sim_train_step(cfg, sim, hyper,
+                                   compressor=PowerSGDCompressor(rank=2))
+
+    data = MarkovLM(vocab=spec.vocab, seed=spec.seed, order=spec.order,
+                    clusters=spec.clusters)
+    eval_data = []
+    for i in range(8):
+        b = data.sample(32, spec.seq, step=10_000 + i)
+        eval_data.append({"tokens": jnp.asarray(b[:, :-1]),
+                          "labels": jnp.asarray(b[:, 1:])})
+
+    @jax.jit
+    def eval_loss_fn(params, batch):
+        from repro.core.dist import SINGLE
+
+        loss, _ = model_lib.loss_fn(params, batch, cfg, SINGLE, q_chunk=32,
+                                    remat=False)
+        return loss
+
+    def eval_loss(params):
+        p0 = jax.tree_util.tree_map(lambda x: x[0], params)
+        return float(np.mean([float(eval_loss_fn(p0, b))
+                              for b in eval_data]))
+
+    def batch_for(i):
+        toks = data.sample(spec.batch_per_worker * spec.workers, spec.seq,
+                           step=i)
+        return sim.shard({"tokens": jnp.asarray(toks[:, :-1]),
+                          "labels": jnp.asarray(toks[:, 1:].copy())})
+
+    def run(step_fn, params, ef, start, stop, save_every=0, save_dir=None,
+            save_times=None):
+        losses = []
+        for i in range(start, stop):
+            params, ef, met = step_fn(params, ef, batch_for(i), key)
+            losses.append(float(met["lm_loss"][0]))
+            # the mid-run save is the ablations' kill point — force it even
+            # when the cadence doesn't land on it
+            if save_every and ((i + 1) % save_every == 0 or i + 1 == mid):
+                jax.block_until_ready(params)  # don't bill async dispatch
+                t0 = time.perf_counter()
+                p, e = canonicalize_sim(sim, params, ef)
+                path = save_train_state(
+                    save_dir, TrainState(params=p, ef=e, key=key,
+                                         data_step=jnp.asarray(e.step)),
+                    keep=1000)
+                save_times.append(time.perf_counter() - t0)
+                save_times_bytes[0] = os.path.getsize(path)
+        return params, ef, losses
+
+    # kill at 80% of the horizon: the realistic preemption case, and short
+    # enough a tail that the degraded restores can't fully re-absorb their
+    # damage before eval (at steps/2 both wash out to ~0.003 nats)
+    steps, mid = spec.steps, (4 * spec.steps) // 5
+    save_times, save_times_bytes = [], [0]
+
+    # uninterrupted reference (with periodic saves, which we time)
+    step_fn, init_state = build()
+    params, ef = init_state(key)
+    t0 = time.perf_counter()
+    params, ef, ref_losses = run(step_fn, params, ef, 0, steps,
+                                 save_every=ckpt_every, save_dir=ckpt_dir,
+                                 save_times=save_times)
+    train_wall = time.perf_counter() - t0
+    ref_eval = eval_loss(params)
+
+    def resume(mutate=None):
+        """Fresh process: restore the step-``mid`` checkpoint, optionally
+        degrade one state piece, continue to the horizon."""
+        step_fn, init_state = build()
+        p0, e0 = init_state(key)
+        template = TrainState(*canonicalize_sim(sim, p0, e0), key=key,
+                              data_step=jnp.zeros((), jnp.int32))
+        t0 = time.perf_counter()
+        state, _ = restore_train_state(ckpt_dir, template, step=mid)
+        restore_s = time.perf_counter() - t0
+        ef = state.ef
+        if mutate is not None:
+            ef = mutate(ef)
+        params, ef = replicate_sim(sim, state.params, ef)
+        params, _, tail = run(step_fn, params, ef, mid, steps)
+        return eval_loss(params), tail, restore_s
+
+    full_eval, full_tail, restore_s = resume()
+
+    def drop_ef(ef):
+        return ef_lib.EFState(
+            error=jax.tree_util.tree_map(jnp.zeros_like, ef.error),
+            momentum=ef.momentum, comp=ef.comp, step=ef.step)
+
+    def drop_warm(ef):
+        shapes = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params_tmpl)
+        comp = PowerSGDCompressor(rank=2).init(
+            shapes, model_lib.mspecs(cfg), jax.random.key(999))
+        return ef_lib.replace_comp(ef, comp)
+
+    params_tmpl = jax.tree_util.tree_map(lambda x: x[0], params)
+    ef_eval, ef_tail, _ = resume(drop_ef)
+    warm_eval, warm_tail, _ = resume(drop_warm)
+
+    def spike(tail):
+        """Worst per-step train-loss excess over the full restore in the
+        first 5 resumed steps — the re-absorption transient."""
+        return round(max(a - b for a, b in
+                         zip(tail[:5], full_tail[:5])), 4)
+
+    bitexact = full_tail == ref_losses[mid:]
+    return [
+        {"mode": "uninterrupted", "eval_loss": round(ref_eval, 4),
+         "final_loss_hex": float(ref_losses[-1]).hex()},
+        {"mode": "resume_full", "eval_loss": round(full_eval, 4),
+         "bitexact_vs_uninterrupted": bool(bitexact),
+         "final_loss_hex": float(full_tail[-1]).hex()},
+        {"mode": "resume_drop_ef", "eval_loss": round(ef_eval, 4),
+         "loss_cost_vs_full": round(ef_eval - full_eval, 4),
+         "post_resume_loss_spike": spike(ef_tail)},
+        {"mode": "resume_drop_warm_start", "eval_loss": round(warm_eval, 4),
+         "loss_cost_vs_full": round(warm_eval - full_eval, 4),
+         "post_resume_loss_spike": spike(warm_tail)},
+        {"mode": "checkpoint_cost",
+         "workers": spec.workers, "steps": steps, "ckpt_every": ckpt_every,
+         "ckpt_mb": round(save_times_bytes[0] / 1e6, 3),
+         "save_ms_mean": round(1e3 * float(np.mean(save_times)), 2),
+         "restore_ms": round(1e3 * restore_s, 2),
+         "save_overhead_pct_of_train":
+             round(100 * sum(save_times) / train_wall, 3)},
+    ]
+
+
+# ---------------------------------------------------------------------------
 # communication model (paper Appendix B cluster: 10 Gbit/s ethernet)
 # ---------------------------------------------------------------------------
 

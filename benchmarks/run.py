@@ -52,6 +52,8 @@ def main() -> None:
         "table7_lstm": lambda: tables.table7_lstm(40 if args.quick else 120),
         "fig3_scaling": lambda: tables.fig3_scaling(params_small, specs_small),
         "adaptive_rank_profile": lambda: tables.adaptive_rank_profile(spec),
+        "resume_overhead": lambda: tables.resume_overhead(
+            spec, ckpt_every=10 if args.quick else 20),
         "comm_profile": lambda: tables.comm_profile(params_small, specs_small),
         "zoo_transport_profile": lambda: tables.zoo_transport_profile(
             params_small, specs_small),

@@ -309,6 +309,26 @@ def adaptive_rank_profile(spec: LMSpec) -> list:
     return rows
 
 
+def resume_overhead(spec: LMSpec, ckpt_every: int = 20) -> list:
+    """Beyond-paper: full-state checkpoint cost + resume ablations.
+
+    Systems studies of compressed training treat resumability and its
+    accounting as table stakes; this table records what ours costs — the
+    envelope size, save/restore wall time and the save overhead at a
+    ``ckpt_every`` cadence — and demonstrates the two claims the docs
+    quote: a full-state resume is *bit-exact* (identical per-step losses
+    through the horizon), while dropping the EF buffers or re-randomizing
+    the warm-start factors on restore (the state a params-only checkpoint
+    silently loses) measurably costs final loss.  See
+    ``benchmarks.common.resume_profile``."""
+    import tempfile
+
+    from benchmarks.common import resume_profile
+
+    with tempfile.TemporaryDirectory() as d:
+        return resume_profile(spec, d, ckpt_every=ckpt_every)
+
+
 def comm_profile(params, specs) -> list:
     """Beyond-paper: the bucketed engine's communication profile.
 

@@ -1,1 +1,6 @@
-from repro.checkpoint.msgpack_ckpt import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.msgpack_ckpt import (
+    CheckpointError, all_steps, checkpoint_meta, latest_step, load_envelope,
+    restore_checkpoint, save_checkpoint)
+from repro.checkpoint.train_state import (
+    TrainState, canonicalize_sim, replicate_sim, restore_train_state,
+    save_train_state)

@@ -1,8 +1,32 @@
 """Pytree checkpointing: msgpack envelope + raw numpy buffers.
 
-Atomic (write to tmp, rename), step-indexed, with a retention policy.
-No flax/orbax dependency — arrays are serialised as (dtype, shape, bytes)
-triples and the tree structure via jax.tree_util key paths.
+Atomic (write to tmp, fsync, rename, fsync dir), step-indexed, with a
+retention policy.  No flax/orbax dependency — arrays are serialised as
+(dtype, shape, bytes) triples and the tree structure via jax.tree_util key
+paths.
+
+Envelope format (``version`` field; see ``docs/checkpoint.md``):
+
+* **v1** (legacy): ``{"step", "treedef", "leaves"}`` — leaves in flatten
+  order only, dtypes as numpy ``.str`` tokens (lossy for extension dtypes:
+  bfloat16 encoded as the void token ``'<V2'``).
+* **v2** (current): adds ``"version"``, ``"meta"`` (a msgpack-native dict of
+  host-side scalars — step counters, worker count, controller state),
+  per-leaf ``"path"`` strings (so mismatches are reported by name, and
+  structure drift is caught even when shapes coincide) and a ``"crc32"``
+  over the concatenated leaf bytes (bit-flips inside the raw buffers parse
+  as valid msgpack; the checksum catches them).  Dtypes use the
+  round-trippable ``.name`` token for extension dtypes.
+
+Restores of both versions are supported; writes always produce v2.
+
+Durability contract: one writer per directory.  ``save_checkpoint`` fsyncs
+the tmp file before the atomic ``os.replace`` (a rename alone can land
+before the data on a crash) and fsyncs the directory afterwards so the
+rename itself is durable; orphaned ``*.tmp`` files from a crashed writer
+are swept on the next save.  ``restore_checkpoint`` raises
+:class:`CheckpointError` — never returns garbage — on truncated, corrupted
+or structurally mismatched envelopes.
 """
 
 from __future__ import annotations
@@ -10,17 +34,37 @@ from __future__ import annotations
 import os
 import re
 import tempfile
-from typing import Any, Optional
+import zlib
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+FORMAT_VERSION = 2
 
-def _flatten(tree):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return leaves, treedef
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.msgpack")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be read back: truncated or corrupted file,
+    or an envelope that does not match the restore template (wrong leaf
+    count, shape or dtype — reported by tree path)."""
+
+
+def _is_none(x):
+    return x is None
+
+
+def _dtype_token(dt) -> str:
+    """Round-trippable dtype token.
+
+    numpy's ``.str`` is lossy for extension dtypes (ml_dtypes bfloat16 →
+    the void token ``'<V2'``, which silently decodes to raw structs);
+    ``.name`` round-trips both standard and extension dtypes."""
+    dt = np.dtype(dt)
+    return dt.name if dt.kind == "V" else dt.str
 
 
 def _encode_leaf(x):
@@ -29,7 +73,7 @@ def _encode_leaf(x):
     arr = np.asarray(x)
     return {
         "kind": "array",
-        "dtype": arr.dtype.str,
+        "dtype": _dtype_token(arr.dtype),
         "shape": list(arr.shape),
         "data": arr.tobytes(),
     }
@@ -42,40 +86,172 @@ def _decode_leaf(d):
     return jnp.asarray(arr.reshape(d["shape"]))
 
 
-def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+def _leaves_crc(encoded) -> int:
+    crc = 0
+    for d in encoded:
+        if d["kind"] == "array":
+            crc = zlib.crc32(d["data"], crc)
+    return crc
+
+
+def _ckpt_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:010d}.msgpack")
+
+
+def _sweep_orphaned_tmp(directory: str):
+    """Remove ``*.tmp`` files left by a crashed writer.
+
+    mkstemp names never collide with a live writer *in this process*; the
+    single-writer-per-directory contract makes the sweep safe globally."""
+    for name in os.listdir(directory):
+        if name.endswith(".tmp"):
+            try:
+                os.remove(os.path.join(directory, name))
+            except FileNotFoundError:
+                pass
+
+
+def _fsync_dir(directory: str):
+    """Make a completed rename durable (POSIX: the directory entry lives in
+    the directory inode, which has its own write-back)."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:  # pragma: no cover - exotic fs without dir open
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3,
+                    meta: Optional[dict] = None) -> str:
     os.makedirs(directory, exist_ok=True)
-    leaves, treedef = jax.tree_util.tree_flatten(
-        tree, is_leaf=lambda x: x is None)
+    _sweep_orphaned_tmp(directory)
+    pairs, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=_is_none)
+    encoded = []
+    for p, l in pairs:
+        d = _encode_leaf(l)
+        d["path"] = jax.tree_util.keystr(p)
+        encoded.append(d)
     payload = {
+        "version": FORMAT_VERSION,
         "step": step,
         "treedef": str(treedef),
-        "leaves": [_encode_leaf(l) for l in leaves],
+        "meta": meta or {},
+        "leaves": encoded,
+        "crc32": _leaves_crc(encoded),
     }
-    path = os.path.join(directory, f"ckpt_{step:010d}.msgpack")
+    path = _ckpt_path(directory, step)
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
-    os.replace(tmp, path)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except FileNotFoundError:
+            pass
+        raise
+    _fsync_dir(directory)
     _retain(directory, keep)
     return path
 
 
-def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None):
-    """Restore into the structure of ``template`` (shapes must match)."""
+def load_envelope(directory: str, step: Optional[int] = None) -> dict:
+    """Read and integrity-check one envelope without a template.
+
+    Returns the raw payload dict (v1 payloads gain ``version=1``,
+    ``meta={}``).  Raises :class:`CheckpointError` on truncated/corrupted
+    files and ``FileNotFoundError`` when there is nothing to load."""
     step = latest_step(directory) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {directory}")
-    path = os.path.join(directory, f"ckpt_{step:010d}.msgpack")
+    path = _ckpt_path(directory, step)
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
-    leaves = [_decode_leaf(d) for d in payload["leaves"]]
-    t_leaves, treedef = jax.tree_util.tree_flatten(
-        template, is_leaf=lambda x: x is None)
-    assert len(leaves) == len(t_leaves), "checkpoint/template structure mismatch"
-    for got, want in zip(leaves, t_leaves):
-        if want is not None and got is not None:
-            assert tuple(got.shape) == tuple(want.shape), (got.shape, want.shape)
-    return jax.tree_util.tree_unflatten(treedef, leaves), payload["step"]
+        raw = f.read()
+    try:
+        payload = msgpack.unpackb(raw, raw=False)
+    except Exception as e:
+        raise CheckpointError(
+            f"{path}: not a valid checkpoint envelope (truncated or "
+            f"corrupted): {e}") from e
+    if (not isinstance(payload, dict) or "leaves" not in payload
+            or "step" not in payload):
+        raise CheckpointError(f"{path}: envelope missing required fields")
+    payload.setdefault("version", 1)
+    payload.setdefault("meta", {})
+    if payload["version"] >= 2:
+        got = _leaves_crc(payload["leaves"])
+        if got != payload.get("crc32"):
+            raise CheckpointError(
+                f"{path}: leaf-data checksum mismatch "
+                f"(crc32 {got:#010x} != recorded "
+                f"{payload.get('crc32', 0):#010x}) — corrupted buffers")
+    return payload
+
+
+def checkpoint_meta(directory: str, step: Optional[int] = None) -> dict:
+    """The ``meta`` dict saved alongside a checkpoint (``{}`` for v1)."""
+    return load_envelope(directory, step)["meta"]
+
+
+def restore_tree(payload: dict, template: Any, shape_ok=None) -> Any:
+    """Decode an envelope's leaves into the structure of ``template``.
+
+    Structure (leaf count + stored paths), None/array-ness and **dtype**
+    are checked strictly — a bfloat16/float32 swap would otherwise restore
+    silently and retrace every downstream jit at the wrong precision.
+    Shapes must match exactly unless ``shape_ok(path, got_shape,
+    want_shape)`` approves the mismatch (how :mod:`~repro.checkpoint.
+    train_state` admits rank/worker-count changes).  Mismatches raise
+    :class:`CheckpointError` naming the offending tree path."""
+    t_pairs, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=_is_none)
+    encoded = payload["leaves"]
+    if len(encoded) != len(t_pairs):
+        raise CheckpointError(
+            f"checkpoint/template structure mismatch: {len(encoded)} leaves "
+            f"in checkpoint, {len(t_pairs)} in template")
+    leaves = []
+    for d, (pathkeys, want) in zip(encoded, t_pairs):
+        tpath = jax.tree_util.keystr(pathkeys)
+        path = d.get("path", tpath)  # v1 has no stored paths
+        if path != tpath:
+            raise CheckpointError(
+                f"checkpoint/template structure mismatch at {tpath}: "
+                f"checkpoint leaf is {path}")
+        got = _decode_leaf(d)
+        if (got is None) != (want is None):
+            raise CheckpointError(
+                f"leaf {tpath}: checkpoint has "
+                f"{'None' if got is None else 'an array'}, template has "
+                f"{'None' if want is None else 'an array'}")
+        if got is not None:
+            if np.dtype(got.dtype) != np.dtype(want.dtype):
+                raise CheckpointError(
+                    f"leaf {tpath}: dtype mismatch — checkpoint "
+                    f"{np.dtype(got.dtype).name}, template "
+                    f"{np.dtype(want.dtype).name}")
+            gs, ws = tuple(got.shape), tuple(want.shape)
+            if gs != ws and not (shape_ok and shape_ok(tpath, gs, ws)):
+                raise CheckpointError(
+                    f"leaf {tpath}: shape mismatch — checkpoint {gs}, "
+                    f"template {ws}")
+        leaves.append(got)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_checkpoint(directory: str, template: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (strict shape + dtype
+    matching per leaf — see :func:`restore_tree`)."""
+    payload = load_envelope(directory, step)
+    return restore_tree(payload, template), payload["step"]
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -83,17 +259,23 @@ def latest_step(directory: str) -> Optional[int]:
         return None
     steps = []
     for name in os.listdir(directory):
-        m = re.fullmatch(r"ckpt_(\d+)\.msgpack", name)
+        m = _CKPT_RE.fullmatch(name)
         if m:
             steps.append(int(m.group(1)))
     return max(steps) if steps else None
 
 
+def all_steps(directory: str) -> list:
+    """Sorted steps of every checkpoint currently in ``directory``."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(int(m.group(1)) for m in
+                  (_CKPT_RE.fullmatch(n) for n in os.listdir(directory)) if m)
+
+
 def _retain(directory: str, keep: int):
-    steps = sorted(
-        int(re.fullmatch(r"ckpt_(\d+)\.msgpack", n).group(1))
-        for n in os.listdir(directory)
-        if re.fullmatch(r"ckpt_(\d+)\.msgpack", n)
-    )
-    for s in steps[:-keep]:
-        os.remove(os.path.join(directory, f"ckpt_{s:010d}.msgpack"))
+    for s in all_steps(directory)[:-keep]:
+        try:
+            os.remove(_ckpt_path(directory, s))
+        except FileNotFoundError:
+            pass  # a concurrent cleaner (or operator) already removed it

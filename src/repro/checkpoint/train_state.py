@@ -1,0 +1,211 @@
+"""Versioned full-algorithm-state checkpoints for fault-tolerant resume.
+
+PowerSGD's trajectory is a function of more than the parameters: the
+error-feedback buffers (Alg. 1 line "e_w ← Δ_w − recon"), the warm-started
+Q factors (§3 warm-start ablation), the rank-schedule position, the PRNG
+stream and the data cursor all carry across steps.  A checkpoint that saves
+only ``{"params", "ef"}`` with no resume path silently restarts all of the
+non-parameter state from zero — :class:`TrainState` is the envelope that
+makes "resume" mean *bit-exact continuation*:
+
+* ``params`` and the full :class:`~repro.core.error_feedback.EFState`
+  (per-worker error buffers, momentum, warm-start factors, step counter),
+* ``key`` — the run's *base* PRNG key; per-step keys are derived as
+  ``fold_in(key, step)``, so (key, step) reproduces the stream,
+* ``data_step`` — the cursor into the deterministic batch stream
+  (:class:`repro.data.synthetic.MarkovLM` samples are keyed by step),
+* host-side scalars in the envelope's ``meta`` dict: worker count, the
+  :class:`~repro.core.powersgd.RankController` state (rank, residual EMA,
+  switch history, transition PRNG key) and any caller extras (schedule
+  spec, last residual).
+
+Canonical worker layout: everything *replicated* across data-parallel
+workers (params, momentum, compressor factors, step) is stored once,
+without a worker dim; only the genuinely per-worker error buffers keep
+their stacked leading ``(W, ...)`` dim.  :func:`canonicalize_sim` /
+:func:`replicate_sim` convert a :class:`~repro.core.simmesh.SimMesh` run's
+stacked trees to/from this layout; the distributed train step's state is
+already canonical (its error buffers are the global ``(dp_total, ...)``
+stack).
+
+Elastic resume: :func:`restore_train_state` restores into a template whose
+error buffers may carry a *different* worker count — the buffers are
+re-sharded by :func:`repro.core.error_feedback.rescale_error_buffers`
+(worker-**mean**-preserving; see its docstring for the exact grow / shrink
+/ coprime semantics).  Same-W restores are bit-exact; rescaled restores are
+trajectory-preserving in the Lemma-3 sense.  Likewise the template's
+compressor factors may sit at a different *rank* than the checkpoint (the
+template is built from config, the checkpoint may be mid-staircase): the
+checkpoint's factors win, and the jitted step simply retraces at the
+checkpointed rank.  Every other leaf must match the template in shape and
+dtype exactly (:class:`~repro.checkpoint.msgpack_ckpt.CheckpointError`
+names the offending leaf otherwise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.msgpack_ckpt import (
+    CheckpointError, load_envelope, restore_tree, save_checkpoint)
+from repro.core import error_feedback
+from repro.core.error_feedback import EFState
+
+TRAIN_STATE_VERSION = 1
+
+# envelope-leaf path prefixes with relaxed shape matching (see module doc)
+_COMP_PREFIX = "['ef'].comp"
+_ERROR_PREFIX = "['ef'].error"
+
+
+@dataclasses.dataclass
+class TrainState:
+    """The whole resumable algorithm state (see module docstring)."""
+
+    params: Any
+    ef: EFState
+    key: jax.Array        # base PRNG key (typed key array or raw uint32)
+    data_step: jax.Array  # int32 batch-stream cursor
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "ef", "key", "data_step"],
+    meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# PRNG keys: msgpack only sees raw uint32 key data + a dtype tag in meta
+# ---------------------------------------------------------------------------
+
+def key_to_data(key: jax.Array) -> Tuple[jax.Array, str]:
+    """(serializable uint32 data, dtype tag) for a typed or raw PRNG key."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key), str(key.dtype)
+    return key, "raw"
+
+
+def key_from_data(data: jax.Array, tag: str) -> jax.Array:
+    if tag == "raw":
+        return data
+    key = jax.random.wrap_key_data(data)
+    if str(key.dtype) != tag:
+        raise CheckpointError(
+            f"PRNG key impl mismatch: checkpoint was saved with {tag}, "
+            f"this process wraps key data as {key.dtype} — resume under "
+            f"the same jax_default_prng_impl")
+    return key
+
+
+# ---------------------------------------------------------------------------
+# save / restore
+# ---------------------------------------------------------------------------
+
+def _as_tree(state: TrainState, key_data) -> dict:
+    return {"params": state.params,
+            "ef": state.ef,
+            "key_data": key_data,
+            "data_step": state.data_step}
+
+
+def _error_workers(ef: EFState) -> Optional[int]:
+    leaves = jax.tree_util.tree_leaves(ef.error)
+    return leaves[0].shape[0] if leaves else None
+
+
+def save_train_state(directory: str, state: TrainState, *,
+                     controller=None, keep: int = 3,
+                     extra_meta: Optional[dict] = None) -> str:
+    """Write one full-state checkpoint at ``state.ef.step``.
+
+    ``state`` must be in the canonical worker layout (see module
+    docstring; SimMesh runs go through :func:`canonicalize_sim` first).
+    ``controller`` — the run's
+    :class:`~repro.core.powersgd.RankController`, serialized into ``meta``
+    so a resume continues the schedule (and its transition PRNG stream)
+    from the exact position.
+    """
+    key_data, key_tag = key_to_data(state.key)
+    meta = {
+        "train_state_version": TRAIN_STATE_VERSION,
+        "workers": _error_workers(state.ef),
+        "key_dtype": key_tag,
+        "controller": None if controller is None else controller.state_dict(),
+    }
+    meta.update(extra_meta or {})
+    return save_checkpoint(directory, int(state.ef.step),
+                           _as_tree(state, key_data), keep=keep, meta=meta)
+
+
+def restore_train_state(directory: str, template: TrainState,
+                        step: Optional[int] = None
+                        ) -> Tuple[TrainState, dict]:
+    """Restore a :class:`TrainState`, adapting rank and worker count.
+
+    ``template`` supplies structure and dtypes (typically a freshly
+    initialized state at the *configured* rank and the *current* worker
+    count).  Returns ``(state, meta)``; ``state`` carries the checkpoint's
+    factor ranks (possibly ≠ template's — the jitted step retraces) and
+    the template's worker count (error buffers rescaled when it differs
+    from ``meta["workers"]``).  Raises :class:`CheckpointError` on
+    truncation/corruption or any other structure/shape/dtype mismatch.
+    """
+    payload = load_envelope(directory, step)
+    meta = payload["meta"]
+    if "train_state_version" not in meta:
+        raise CheckpointError(
+            f"checkpoint in {directory} is not a TrainState envelope "
+            f"(plain save_checkpoint tree?) — no train_state_version in "
+            f"meta")
+
+    def shape_ok(tpath, gs, ws):
+        if tpath.startswith(_COMP_PREFIX):
+            return gs[:-1] == ws[:-1]    # rank (last dim) may move
+        if tpath.startswith(_ERROR_PREFIX):
+            return gs[1:] == ws[1:]      # worker count (dim 0) may move
+        return False
+
+    key_data, _ = key_to_data(template.key)
+    tree = restore_tree(payload, _as_tree(template, key_data),
+                        shape_ok=shape_ok)
+    ef: EFState = tree["ef"]
+    w_new = _error_workers(template.ef)
+    if w_new is not None and _error_workers(ef) != w_new:
+        ef = EFState(
+            error=error_feedback.rescale_error_buffers(ef.error, w_new),
+            momentum=ef.momentum, comp=ef.comp, step=ef.step)
+    state = TrainState(
+        params=tree["params"], ef=ef,
+        key=key_from_data(tree["key_data"], meta.get("key_dtype", "raw")),
+        data_step=tree["data_step"])
+    return state, meta
+
+
+# ---------------------------------------------------------------------------
+# SimMesh ⇄ canonical layout
+# ---------------------------------------------------------------------------
+
+def canonicalize_sim(sim, params, ef: EFState) -> Tuple[Any, EFState]:
+    """Strip a SimMesh run's stacked worker dim from every replicated tree
+    (params, momentum, compressor factors, step), keeping the genuinely
+    per-worker error-buffer stack — the canonical checkpoint layout."""
+    return sim.unreplicate(params), EFState(
+        error=ef.error,
+        momentum=sim.unreplicate(ef.momentum),
+        comp=sim.unreplicate(ef.comp),
+        step=sim.unreplicate(ef.step))
+
+
+def replicate_sim(sim, params, ef: EFState) -> Tuple[Any, EFState]:
+    """Inverse of :func:`canonicalize_sim` onto ``sim`` — which may have a
+    *different* worker count than the canonical state was saved from:
+    replicated trees re-broadcast, error buffers re-shard through
+    :func:`repro.core.error_feedback.rescale_error_buffers`."""
+    return sim.replicate(params), EFState(
+        error=error_feedback.rescale_error_buffers(ef.error, sim.workers),
+        momentum=sim.replicate(ef.momentum),
+        comp=sim.replicate(ef.comp),
+        step=sim.replicate(ef.step))

@@ -49,6 +49,18 @@ from repro.core.dist import MeshCtx, SINGLE
 
 @dataclasses.dataclass
 class EFState:
+    """The optimizer's full cross-step state.
+
+    Every field is *algorithm state* in the fault-tolerance sense — the
+    trajectory is a function of all four, so a checkpoint that drops any of
+    them does not resume the same algorithm: zeroed ``error`` discards the
+    compression error Algorithm 1's EF loop was about to feed back, and a
+    re-randomized ``comp`` restarts the warm-start power iteration from
+    scratch (§3 ablation).  ``repro.checkpoint.train_state`` serializes the
+    whole thing; the measured cost of dropping each piece is in
+    ``docs/paper_map.md`` (resume design note).
+    """
+
     error: Any        # per-worker error buffers e_w (tree like params)
     momentum: Any     # post-compression momentum m (tree like params)
     comp: Any         # compressor state (e.g. PowerSGD Q factors)
@@ -69,6 +81,54 @@ def init_state(compressor: Compressor, params, specs, key: jax.Array) -> EFState
         comp=compressor.init(shapes, specs, key),
         step=jnp.zeros((), jnp.int32),
     )
+
+
+def rescale_error_buffers(error, workers: int):
+    """Re-shard a stacked per-worker error-buffer tree to a new worker count.
+
+    ``error`` carries a leading worker dim ``W_old`` on every leaf (the
+    SimMesh stacked layout, or the distributed step's global
+    ``(dp_total, ...)`` buffers pulled to host).  The elastic-resume
+    contract is about the quantity Algorithm 2 actually aggregates — the
+    *worker-mean* of ``Δ_w = g_w + e_w`` — so the rescale preserves the
+    worker-mean of the buffers (Lemma 3's linearity then carries the
+    trajectory):
+
+    * ``W_new == W_old`` — identity, bit-exact.
+    * ``W_new % W_old == 0`` (grow, e.g. 1→4): each original buffer is
+      duplicated to its ``W_new/W_old`` successor workers.  Every new
+      buffer equals an original bit-exactly, and the worker-mean is the
+      original multiset mean unchanged.
+    * ``W_old % W_new == 0`` (shrink, e.g. 4→1): each new buffer is the
+      mean of the ``W_old/W_new`` buffers it absorbs — the global mean is
+      preserved up to one float32 reassociation.
+    * otherwise: every new buffer is the global worker-mean (the documented
+      fallback for coprime rescales).
+
+    Only the *mean* is an invariant: per-worker identity is necessarily
+    lost when W changes, so a rescaled resume is trajectory-preserving in
+    the Lemma-3 sense, not bit-exact (``tests/sim/test_resume.py`` pins
+    both sides of that line).
+    """
+    leaves = jax.tree_util.tree_leaves(error)
+    if not leaves:
+        return error
+    w_old = leaves[0].shape[0]
+    for l in leaves:
+        assert l.shape[0] == w_old, (l.shape, w_old)
+    if workers == w_old:
+        return error
+
+    def leaf(e):
+        if workers % w_old == 0:
+            return jnp.repeat(e, workers // w_old, axis=0)
+        if w_old % workers == 0:
+            k = w_old // workers
+            return jnp.mean(e.reshape((workers, k) + e.shape[1:]), axis=1)
+        mean = jnp.mean(e, axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, (workers,) + e.shape[1:])
+
+    return jax.tree_util.tree_map(leaf, error)
 
 
 def replace_comp(state: EFState, comp) -> EFState:

@@ -388,6 +388,48 @@ class RankController:
         self.history.append((step, new))
         return comp_state, True
 
+    # -- fault-tolerant resume (checkpoint/train_state.py) ------------------
+    # The controller is algorithm state: the current rank must agree with
+    # the checkpointed factors' shapes, the residual EMA and the transition
+    # PRNG key must continue their streams, and the switch history is the
+    # audit log benchmarks report.  next_rank() is deterministic given
+    # (step, current, ema), so a restored controller replays the remaining
+    # schedule bit-exactly — including the N(0,1) columns a future growth
+    # transition will draw from `key`.
+
+    def state_dict(self) -> dict:
+        """Msgpack-native snapshot for a checkpoint ``meta`` dict."""
+        import numpy as np
+
+        if jnp.issubdtype(self.key.dtype, jax.dtypes.prng_key):
+            key_data, key_tag = jax.random.key_data(self.key), str(self.key.dtype)
+        else:
+            key_data, key_tag = self.key, "raw"
+        return {
+            "rank": int(self.rank),
+            "ema": None if self._ema is None else float(self._ema),
+            "history": [[int(s), int(r)] for s, r in self.history],
+            "key_data": np.asarray(key_data).astype(np.uint32).tolist(),
+            "key_dtype": key_tag,
+        }
+
+    def load_state_dict(self, d: dict) -> "RankController":
+        """Restore a :meth:`state_dict` snapshot (schedule comes from the
+        constructor — the resuming run must be configured with the same
+        schedule spec; drivers should verify that before calling)."""
+        self.rank = int(d["rank"])
+        self._ema = None if d["ema"] is None else float(d["ema"])
+        self.history = [(int(s), int(r)) for s, r in d["history"]]
+        key = jnp.asarray(d["key_data"], dtype=jnp.uint32)
+        if d.get("key_dtype", "raw") != "raw":
+            key = jax.random.wrap_key_data(key)
+            if str(key.dtype) != d["key_dtype"]:
+                raise ValueError(
+                    f"RankController key impl mismatch: checkpoint "
+                    f"{d['key_dtype']}, this process {key.dtype}")
+        self.key = key
+        return self
+
 
 def init_state(cfg: PowerSGDConfig, shapes, specs, key: jax.Array):
     """Q ∈ R^{m×r} per matrix leaf, i.i.d. standard normal (Alg. 1 line 1)."""

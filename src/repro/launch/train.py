@@ -3,7 +3,11 @@ manual Megatron-style TP collectives and PowerSGD gradient aggregation over
 the data axes (the paper's Algorithm 1+2, composed with tensor parallelism).
 
 Also provides a CLI driver (``python -m repro.launch.train``) that trains a
-reduced model end-to-end on the host devices.
+reduced model end-to-end on the host devices, with full-state fault-tolerant
+checkpointing: ``--ckpt-every`` writes periodic
+:class:`repro.checkpoint.TrainState` envelopes (params, EF buffers,
+warm-start factors, rank controller, PRNG stream, data cursor) and
+``--resume`` continues a killed run bit-exactly (``docs/checkpoint.md``).
 """
 
 from __future__ import annotations
@@ -271,8 +275,8 @@ def main():
     import argparse
     import time
 
-    import numpy as np
-
+    from repro.checkpoint import (TrainState, restore_train_state,
+                                  save_train_state)
     from repro.configs.base import get_config
     from repro.data.synthetic import MarkovLM
 
@@ -289,7 +293,20 @@ def main():
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save a full TrainState checkpoint every N steps "
+                         "(0 = only at the end; needs --ckpt-dir)")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="retention: keep the newest N checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir: "
+                         "full algorithm state (EF buffers, warm-start "
+                         "factors, rank controller, PRNG stream, data "
+                         "cursor), bit-exact at the same worker count")
     args = ap.parse_args()
+    if args.ckpt_every and not args.ckpt_dir:
+        ap.error("--ckpt-every requires --ckpt-dir (no checkpoint would "
+                 "ever be written)")
 
     cfg = get_config(args.arch, reduced=True)
     n_dev = len(jax.devices())
@@ -310,15 +327,54 @@ def main():
     controller = (compressor.controller()
                   if compressor.rank_schedule is not None else None)
 
-    key = jax.random.key(0)
+    key = jax.random.key(0)   # base key; per-step keys fold in the step index
     with jax.set_mesh(m):
         params, ef = init_state(key)
     data = MarkovLM(vocab=cfg.vocab_size, seed=0)
-    it = data.batches(args.batch, args.seq)
+
+    start = 0
+    residual = None
+    if args.resume:
+        if not args.ckpt_dir:
+            ap.error("--resume requires --ckpt-dir")
+        template = TrainState(params=params, ef=ef, key=key,
+                              data_step=jnp.zeros((), jnp.int32))
+        state, meta = restore_train_state(args.ckpt_dir, template)
+        if meta.get("rank_schedule") != args.rank_schedule:
+            raise SystemExit(
+                f"--rank-schedule {args.rank_schedule!r} does not match the "
+                f"checkpoint's {meta.get('rank_schedule')!r} — resume with "
+                f"the schedule the run was started with")
+        params, ef, key = state.params, state.ef, state.key
+        start = int(state.ef.step)
+        if int(state.data_step) != start:
+            raise SystemExit(
+                f"checkpoint data cursor {int(state.data_step)} does not "
+                f"match its step counter {start} — this CLI keys batches "
+                f"by step, so the envelope was written by a different "
+                f"driver; resume it with that driver")
+        if controller is not None and meta.get("controller"):
+            controller.load_state_dict(meta["controller"])
+        residual = meta.get("last_residual")
+        print(f"resumed from step {start} in {args.ckpt_dir} "
+              f"(saved at {meta.get('workers')} worker(s), rank "
+              f"{controller.rank if controller else args.rank})")
+
+    def save_ckpt():
+        # params/ef/key/residual are read at call time: the state *after*
+        # the step that just completed, i.e. "about to run step ef.step"
+        path = save_train_state(
+            args.ckpt_dir,
+            TrainState(params=params, ef=ef, key=key,
+                       data_step=jnp.asarray(int(ef.step), jnp.int32)),
+            controller=controller, keep=args.ckpt_keep,
+            extra_meta={"rank_schedule": args.rank_schedule,
+                        "arch": args.arch, "last_residual": residual})
+        return path
 
     t0 = time.time()
-    residual = None
-    for i in range(args.steps):
+    metrics = {}
+    for i in range(start, args.steps):
         if controller is not None:
             # host-level rank transition: a switch changes the factor
             # shapes, and the jitted step simply retraces
@@ -326,19 +382,27 @@ def main():
             if changed:
                 ef = error_feedback.replace_comp(ef, new_comp)
                 print(f"step {i:4d} rank -> {controller.rank}")
-        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        # the data cursor IS the step index: batch i is sample(step=i),
+        # so a resumed run rejoins the stream exactly where it left off
+        toks = data.sample(args.batch, args.seq, step=i)
+        batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                 "labels": jnp.asarray(toks[:, 1:].copy())}
+        step_key = jax.random.fold_in(key, i)
         with jax.set_mesh(m):
-            params, ef, metrics = step_fn(params, ef, batch, key)
+            params, ef, metrics = step_fn(params, ef, batch, step_key)
         if "residual_ratio" in metrics:
             residual = float(metrics["residual_ratio"])
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss={float(metrics['lm_loss']):.4f} "
                   f"lr={float(metrics['lr']):.4f} ({time.time()-t0:.1f}s)")
-    if args.ckpt_dir:
-        from repro.checkpoint import save_checkpoint
-        save_checkpoint(args.ckpt_dir, args.steps,
-                        {"params": params, "ef": ef})
-        print(f"checkpoint saved to {args.ckpt_dir}")
+        if args.ckpt_dir and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            print(f"step {i:4d} checkpoint -> {save_ckpt()}")
+    if args.ckpt_dir and start < args.steps:
+        print(f"final checkpoint -> {save_ckpt()}")
+    if metrics:
+        # full-precision hex so the CI resume smoke can compare bit-for-bit
+        print(f"final lm_loss={float(metrics['lm_loss']):.6f} "
+              f"hex={float(metrics['lm_loss']).hex()}")
 
 
 if __name__ == "__main__":

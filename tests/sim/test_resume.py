@@ -1,0 +1,227 @@
+"""Fault-tolerant resume on SimMesh (ISSUE 5 tentpole coverage).
+
+The headline guarantee: save → kill → resume reproduces the uninterrupted
+run's per-step losses *bit-for-bit*, because the checkpoint carries the
+whole algorithm state — EF error buffers, momentum, warm-start Q factors,
+step counter, rank-controller position, base PRNG key and data cursor.
+"Kill" is simulated by rebuilding everything from scratch (fresh compressor,
+fresh jitted step, fresh controller) and restoring only from the envelope
+bytes, exactly what a new process does.
+
+Also pinned here: the *elastic* resume contract — restoring a W=1 run into
+W=4 workers duplicates the error buffers (worker-mean preserved, see
+``rescale_error_buffers``), so the continuation tracks the uninterrupted
+run within the Lemma-3 linearity tolerance rather than bit-exactly — and
+corrupted/truncated envelope rejection end-to-end."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import worst_rel_diff
+from repro.checkpoint import (CheckpointError, TrainState, canonicalize_sim,
+                              replicate_sim, restore_train_state,
+                              save_train_state)
+from repro.configs.base import get_config
+from repro.core.compressors import PowerSGDCompressor
+from repro.core.error_feedback import EFState
+from repro.core.simmesh import SimMesh
+from repro.data.synthetic import MarkovLM
+from repro.launch.train import TrainHyper, make_sim_train_step
+
+KEY = jax.random.key(0)
+BATCH, SEQ = 8, 32
+STEPS, CKPT_AT = 8, 4
+LINEARITY_TOL = 5e-5  # f32 reassociation across the worker-mean
+
+
+def build(workers, schedule=None):
+    """A fresh "process": new compressor, new jitted step, new controller."""
+    cfg = get_config("llama3-8b", reduced=True)
+    hyper = TrainHyper(q_chunk=32, warmup_steps=5, remat=False,
+                       weight_decay=0.0, rank_schedule=schedule)
+    compressor = PowerSGDCompressor(rank=2, rank_schedule=schedule)
+    sim = SimMesh(workers)
+    step_fn, init_state = make_sim_train_step(cfg, sim, hyper,
+                                              compressor=compressor)
+    controller = compressor.controller() if schedule else None
+    return cfg, sim, step_fn, init_state, controller
+
+
+def run(cfg, sim, step_fn, params, ef, controller, start, steps,
+        residual=None):
+    """Drive steps [start, steps) — data batches keyed by absolute step."""
+    data = MarkovLM(vocab=cfg.vocab_size, seed=0)
+    losses = []
+    for i in range(start, steps):
+        if controller is not None:
+            comp_w0 = jax.tree_util.tree_map(lambda x: x[0], ef.comp)
+            new_comp, changed = controller.update(comp_w0, i, residual)
+            if changed:
+                ef = EFState(error=ef.error, momentum=ef.momentum,
+                             comp=sim.replicate(new_comp), step=ef.step)
+        toks = data.sample(BATCH, SEQ, step=i)
+        b = sim.shard({"tokens": jnp.asarray(toks[:, :-1]),
+                       "labels": jnp.asarray(toks[:, 1:].copy())})
+        params, ef, met = step_fn(params, ef, b, KEY)
+        losses.append(float(met["lm_loss"][0]))
+    return params, ef, losses
+
+
+def save_at(tmpdir, sim, params, ef, controller=None, schedule=None,
+            residual=None):
+    p, e = canonicalize_sim(sim, params, ef)
+    return save_train_state(
+        str(tmpdir), TrainState(params=p, ef=e, key=KEY,
+                                data_step=jnp.asarray(e.step)),
+        controller=controller,
+        extra_meta={"rank_schedule": schedule, "last_residual": residual})
+
+
+def restore_into(tmpdir, workers, schedule=None):
+    """The resumed process: rebuild from config, restore, re-replicate."""
+    cfg, sim, step_fn, init_state, controller = build(workers, schedule)
+    p0, e0 = init_state(KEY)
+    template = TrainState(*canonicalize_sim(sim, p0, e0), key=KEY,
+                          data_step=jnp.zeros((), jnp.int32))
+    state, meta = restore_train_state(str(tmpdir), template)
+    if controller is not None and meta.get("controller"):
+        controller.load_state_dict(meta["controller"])
+    params, ef = replicate_sim(sim, state.params, state.ef)
+    return cfg, sim, step_fn, controller, params, ef, meta
+
+
+@pytest.fixture(scope="module", params=[1, 4], ids=["W1", "W4"])
+def fixed_rank_runs(request, tmp_path_factory):
+    """Per worker count: the uninterrupted reference run and a checkpoint
+    taken at CKPT_AT by an independent 'process'."""
+    w = request.param
+    ckdir = tmp_path_factory.mktemp(f"ck_fixed_w{w}")
+
+    cfg, sim, step_fn, init_state, _ = build(w)
+    params, ef = init_state(KEY)
+    params, ef, losses = run(cfg, sim, step_fn, params, ef, None, 0, STEPS)
+    reference = (losses,
+                 jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params))
+
+    cfg, sim, step_fn, init_state, _ = build(w)  # fresh process
+    params, ef = init_state(KEY)
+    params, ef, head = run(cfg, sim, step_fn, params, ef, None, 0, CKPT_AT)
+    save_at(ckdir, sim, params, ef)
+    assert head == reference[0][:CKPT_AT], \
+        "pre-checkpoint prefix must already be deterministic"
+    return w, ckdir, reference
+
+
+def test_resume_bit_exact_fixed_rank(fixed_rank_runs):
+    """save → kill → resume: per-step losses and final params bit-for-bit
+    equal to the uninterrupted run, at W=1 and W=4."""
+    w, ckdir, (ref_losses, ref_params) = fixed_rank_runs
+    cfg, sim, step_fn, _, params, ef, meta = restore_into(ckdir, w)
+    assert meta["workers"] == w and int(ef.step[0]) == CKPT_AT
+    params, ef, tail = run(cfg, sim, step_fn, params, ef, None,
+                           CKPT_AT, STEPS)
+    assert tail == ref_losses[CKPT_AT:], (
+        "resumed losses diverge from the uninterrupted run", tail,
+        ref_losses[CKPT_AT:])
+    got = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(ref_params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_resume_bit_exact_mid_staircase(tmp_path):
+    """Checkpoint taken *between* staircase milestones (rank already moved
+    1→2, the 2→4 transition still ahead): the resumed run must replay the
+    remaining transition — including the fresh N(0,1) growth columns drawn
+    from the controller's restored PRNG key — bit-exactly."""
+    schedule = "1@0,2@3,4@6"
+    steps = 9
+
+    cfg, sim, step_fn, init_state, ctrl = build(4, schedule)
+    params, ef = init_state(KEY)
+    params, ef, ref_losses = run(cfg, sim, step_fn, params, ef, ctrl,
+                                 0, steps)
+    ref_params = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
+    ref_history = list(ctrl.history)
+
+    cfg, sim, step_fn, init_state, ctrl = build(4, schedule)
+    params, ef = init_state(KEY)
+    params, ef, _ = run(cfg, sim, step_fn, params, ef, ctrl, 0, CKPT_AT)
+    assert ctrl.rank == 2  # mid-staircase: after 2@3, before 4@6
+    save_at(tmp_path, sim, params, ef, controller=ctrl, schedule=schedule)
+
+    cfg, sim, step_fn, ctrl2, params, ef, meta = restore_into(
+        tmp_path, 4, schedule)
+    assert meta["rank_schedule"] == schedule
+    assert ctrl2.rank == 2  # restored, not re-initialized (would be 1)
+    # restored factors sit at the checkpointed rank, not the config rank
+    ranks = {q.shape[-1] for q in jax.tree_util.tree_leaves(ef.comp)}
+    assert ranks == {2}, ranks
+    params, ef, tail = run(cfg, sim, step_fn, params, ef, ctrl2,
+                           CKPT_AT, steps)
+    assert tail == ref_losses[CKPT_AT:]
+    assert ctrl2.history == ref_history
+    got = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(ref_params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_elastic_resume_1_to_4(fixed_rank_runs, tmp_path):
+    """Restore a W=1 checkpoint into W=4 workers: error buffers duplicate
+    bit-exactly (worker-mean preserved), the continuation tracks the
+    uninterrupted W=1 run within the Lemma-3 linearity tolerance, and the
+    workers stay bit-identical."""
+    w, ckdir, (ref_losses, ref_params) = fixed_rank_runs
+    if w != 1:
+        pytest.skip("elastic source is the W=1 checkpoint")
+
+    cfg, sim, step_fn, _, params, ef, meta = restore_into(ckdir, 4)
+    assert meta["workers"] == 1
+    # grow semantics: every worker starts from the W=1 buffer, bit-exactly
+    src, _ = restore_train_state(
+        str(ckdir),
+        TrainState(*canonicalize_sim(SimMesh(1), *_fresh_state(1)), key=KEY,
+                   data_step=jnp.zeros((), jnp.int32)))
+    for e4, e1 in zip(jax.tree_util.tree_leaves(ef.error),
+                      jax.tree_util.tree_leaves(src.ef.error)):
+        for wk in range(4):
+            np.testing.assert_array_equal(np.asarray(e4[wk]),
+                                          np.asarray(e1[0]))
+
+    params, ef, tail = run(cfg, sim, step_fn, params, ef, None,
+                           CKPT_AT, STEPS)
+    sim.assert_replicated(params, "params after elastic resume")
+    got = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
+    worst = worst_rel_diff(got, ref_params)
+    assert worst < LINEARITY_TOL, (
+        f"elastic W=1→4 resume violates Lemma-3 linearity: {worst:.3e}")
+    # and the losses agree to the same (loose) tolerance, step by step
+    np.testing.assert_allclose(tail, ref_losses[CKPT_AT:], rtol=1e-4)
+
+
+def _fresh_state(workers):
+    _, sim, _, init_state, _ = build(workers)
+    return init_state(KEY)
+
+
+def test_truncated_sim_checkpoint_rejected(tmp_path):
+    cfg, sim, step_fn, init_state, _ = build(1)
+    params, ef = init_state(KEY)
+    params, ef, _ = run(cfg, sim, step_fn, params, ef, None, 0, 1)
+    path = save_at(tmp_path, sim, params, ef)
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(raw[:len(raw) - len(raw) // 3])
+    with pytest.raises(CheckpointError):
+        restore_into(tmp_path, 1)
+    # a truncated envelope must also never be silently skipped: the error
+    # names the file so operators can fall back to an older retained step
+    try:
+        restore_into(tmp_path, 1)
+    except CheckpointError as e:
+        assert os.path.basename(path) in str(e)

@@ -1,0 +1,293 @@
+"""Checkpoint-layer unit tests (ISSUE 5): v2 envelope integrity, durability
+mechanics (fsync, tmp sweep, retention races), dtype/shape/structure checks
+with leaf-path errors, legacy-v1 restore, PRNG/controller serialization and
+the elastic error-buffer rescale semantics.
+
+SimMesh end-to-end resume coverage (bit-exactness, elastic W=1→4) lives in
+``tests/sim/test_resume.py``."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointError, TrainState, all_steps,
+                              checkpoint_meta, latest_step,
+                              restore_checkpoint, restore_train_state,
+                              save_checkpoint, save_train_state)
+from repro.checkpoint import msgpack_ckpt
+from repro.core.error_feedback import EFState, rescale_error_buffers
+from repro.core.powersgd import RankController
+
+
+def _tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16), "d": None},
+            "step": jnp.int32(7)}
+
+
+# ---------------------------------------------------------------------------
+# envelope roundtrip + integrity
+# ---------------------------------------------------------------------------
+
+def test_v2_roundtrip_with_meta(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 7, tree, meta={"workers": 4, "note": "x"})
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(restored),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+    assert restored["b"]["d"] is None
+    assert checkpoint_meta(str(tmp_path)) == {"workers": 4, "note": "x"}
+
+
+def test_bfloat16_roundtrips_exactly(tmp_path):
+    """The legacy encoder stored numpy's ``.str`` token, which is '<V2'
+    (void) for bfloat16 — decoding produced raw structs.  v2 must
+    round-trip extension dtypes bit-exactly."""
+    tree = {"w": (jnp.arange(7, dtype=jnp.bfloat16) * 0.3)}
+    save_checkpoint(str(tmp_path), 0, tree)
+    restored, _ = restore_checkpoint(str(tmp_path), tree)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"]).view(np.uint16),
+        np.asarray(tree["w"]).view(np.uint16))
+
+
+def test_dtype_mismatch_names_leaf(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"m": {"w": jnp.zeros(3, jnp.float32)}})
+    with pytest.raises(CheckpointError, match=r"\['m'\]\['w'\].*dtype.*"
+                                              r"float32.*bfloat16"):
+        restore_checkpoint(str(tmp_path),
+                           {"m": {"w": jnp.zeros(3, jnp.bfloat16)}})
+
+
+def test_shape_mismatch_names_leaf(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"m": {"w": jnp.zeros((3, 2))}})
+    with pytest.raises(CheckpointError, match=r"\['m'\]\['w'\].*shape"):
+        restore_checkpoint(str(tmp_path), {"m": {"w": jnp.zeros((3, 4))}})
+
+
+def test_structure_drift_caught_by_paths(tmp_path):
+    """Same leaf count and shapes but different tree keys must not restore
+    silently into the wrong slots (v2 stores per-leaf paths)."""
+    save_checkpoint(str(tmp_path), 1, {"p": jnp.zeros(3), "q": jnp.ones(3)})
+    with pytest.raises(CheckpointError, match="structure mismatch"):
+        restore_checkpoint(str(tmp_path),
+                           {"p": jnp.zeros(3), "r": jnp.ones(3)})
+
+
+def test_truncated_checkpoint_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 3, _tree())
+    path = os.path.join(str(tmp_path), "ckpt_0000000003.msgpack")
+    data = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(data[:len(data) // 2])
+    with pytest.raises(CheckpointError, match="truncated or corrupted"):
+        restore_checkpoint(str(tmp_path), _tree())
+
+
+def test_bitflip_in_buffers_rejected_by_crc(tmp_path):
+    """A flipped bit inside the raw leaf bytes still parses as valid
+    msgpack — only the checksum catches it."""
+    tree = {"w": jnp.ones(1024)}
+    save_checkpoint(str(tmp_path), 3, tree)
+    path = os.path.join(str(tmp_path), "ckpt_0000000003.msgpack")
+    raw = bytearray(open(path, "rb").read())
+    # flip a bit in the middle of the (large, contiguous) float payload
+    raw[len(raw) // 2] ^= 0x10
+    with open(path, "wb") as f:
+        f.write(bytes(raw))
+    with pytest.raises(CheckpointError, match="checksum"):
+        restore_checkpoint(str(tmp_path), tree)
+
+
+def test_legacy_v1_envelope_still_restores(tmp_path):
+    """Pre-versioning checkpoints (no version/meta/paths/crc) must load."""
+    tree = {"w": jnp.arange(4.0)}
+    arr = np.asarray(tree["w"])
+    payload = {"step": 5, "treedef": "ignored",
+               "leaves": [{"kind": "array", "dtype": arr.dtype.str,
+                           "shape": list(arr.shape), "data": arr.tobytes()}]}
+    with open(os.path.join(str(tmp_path), "ckpt_0000000005.msgpack"),
+              "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), arr)
+    assert checkpoint_meta(str(tmp_path)) == {}
+
+
+# ---------------------------------------------------------------------------
+# durability mechanics
+# ---------------------------------------------------------------------------
+
+def test_save_fsyncs_before_replace(tmp_path, monkeypatch):
+    synced = []
+    real_fsync = os.fsync
+    real_replace = os.replace
+
+    def spy_fsync(fd):
+        synced.append("fsync")
+        return real_fsync(fd)
+
+    def spy_replace(src, dst):
+        assert "fsync" in synced, "os.replace before any fsync: a crash " \
+            "could publish a checkpoint whose data never hit disk"
+        synced.append("replace")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "fsync", spy_fsync)
+    monkeypatch.setattr(os, "replace", spy_replace)
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(3)})
+    assert "replace" in synced
+    # and the directory entry is fsync'd after the rename
+    assert synced.index("replace") < len(synced) - 1
+
+
+def test_orphaned_tmp_files_swept(tmp_path):
+    """mkstemp leaks *.tmp forever if the writer crashes between write and
+    rename — the next save must sweep them."""
+    orphan = tmp_path / "abcdef.tmp"
+    orphan.write_bytes(b"half-written checkpoint")
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(3)})
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["ckpt_0000000001.msgpack"], names
+
+
+def test_failed_save_leaves_no_tmp(tmp_path, monkeypatch):
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(msgpack_ckpt.msgpack, "packb", boom)
+    with pytest.raises(OSError):
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(3)})
+    assert [n for n in os.listdir(tmp_path) if n.endswith(".tmp")] == []
+
+
+def test_retain_tolerates_vanishing_files(tmp_path, monkeypatch):
+    """A concurrent cleaner removing an old checkpoint between listdir and
+    os.remove must not crash the save."""
+    tree = {"w": jnp.zeros(3)}
+    for s in range(3):
+        save_checkpoint(str(tmp_path), s, tree, keep=10)
+
+    real_remove = os.remove
+
+    def racy_remove(path):
+        real_remove(path)          # the file vanishes...
+        raise FileNotFoundError(path)  # ...and the racer sees ENOENT
+
+    monkeypatch.setattr(msgpack_ckpt.os, "remove", racy_remove)
+    save_checkpoint(str(tmp_path), 3, tree, keep=1)  # must not raise
+    monkeypatch.undo()
+    assert all_steps(str(tmp_path)) == [3]
+
+
+def test_retention_and_latest(tmp_path):
+    tree = {"w": jnp.zeros(3)}
+    for s in range(6):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    assert all_steps(str(tmp_path)) == [4, 5]
+    assert latest_step(str(tmp_path)) == 5
+
+
+# ---------------------------------------------------------------------------
+# TrainState envelope: PRNG keys, controller, elastic rescale
+# ---------------------------------------------------------------------------
+
+def _train_state(workers=1, rank=2):
+    key = jax.random.key(11)
+    ef = EFState(
+        error={"w": jnp.arange(float(workers * 6)).reshape(workers, 6)},
+        momentum={"w": jnp.ones(6)},
+        comp={"w": jax.random.normal(key, (6, rank)), "b": None},
+        step=jnp.int32(4))
+    return TrainState(params={"w": jnp.full((6,), 2.0)}, ef=ef, key=key,
+                      data_step=jnp.int32(4))
+
+
+def test_train_state_roundtrip_continues_prng_stream(tmp_path):
+    st = _train_state()
+    save_train_state(str(tmp_path), st, extra_meta={"last_residual": 0.5})
+    restored, meta = restore_train_state(str(tmp_path), _train_state())
+    assert meta["workers"] == 1 and meta["last_residual"] == 0.5
+    # the restored key reproduces the same per-step stream
+    a = jax.random.normal(jax.random.fold_in(st.key, 9))
+    b = jax.random.normal(jax.random.fold_in(restored.key, 9))
+    assert float(a) == float(b)
+    assert int(restored.ef.step) == 4 and int(restored.data_step) == 4
+
+
+def test_train_state_rejects_plain_checkpoint(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"params": {"w": jnp.zeros(3)}})
+    with pytest.raises(CheckpointError, match="train_state_version"):
+        restore_train_state(str(tmp_path), _train_state())
+
+
+def test_restore_keeps_checkpoint_rank(tmp_path):
+    """Template built at the configured rank, checkpoint mid-staircase at a
+    different one: the checkpoint's factors win (the jitted step retraces);
+    every non-factor leaf still shape-checks strictly."""
+    save_train_state(str(tmp_path), _train_state(rank=2))
+    restored, _ = restore_train_state(str(tmp_path), _train_state(rank=4))
+    assert restored.ef.comp["w"].shape == (6, 2)
+
+
+def test_restore_rescales_error_buffers(tmp_path):
+    st = _train_state(workers=1)
+    save_train_state(str(tmp_path), st)
+    restored, meta = restore_train_state(str(tmp_path),
+                                         _train_state(workers=4))
+    assert meta["workers"] == 1
+    err = np.asarray(restored.ef.error["w"])
+    assert err.shape == (4, 6)
+    for w in range(4):  # grow = bit-exact duplication
+        np.testing.assert_array_equal(err[w], np.asarray(st.ef.error["w"][0]))
+
+
+def test_controller_state_dict_roundtrip():
+    c = RankController("1@0,2@3,4@6")
+    c.update(None, 0)
+    comp = {"w": jnp.zeros((8, 1))}
+    comp, changed = c.update(comp, 3)
+    assert changed and c.rank == 2
+    c.observe(0.4)
+
+    d = c.state_dict()
+    c2 = RankController("1@0,2@3,4@6").load_state_dict(d)
+    assert c2.rank == 2 and c2.history == c.history
+    assert c2._ema == pytest.approx(c._ema)
+    # the transition PRNG stream continues identically: the *next* growth
+    # draws the same fresh columns in both controllers
+    n1, _ = c.update({"w": jnp.zeros((8, 2))}, 6)
+    n2, _ = c2.update({"w": jnp.zeros((8, 2))}, 6)
+    np.testing.assert_array_equal(np.asarray(n1["w"]), np.asarray(n2["w"]))
+
+
+def test_rescale_error_buffers_semantics():
+    e = {"w": jnp.asarray(np.random.RandomState(0).randn(4, 5), jnp.float32)}
+    # identity
+    assert rescale_error_buffers(e, 4)["w"] is e["w"]
+    # grow 4→8: duplication, worker-mean preserved exactly as a multiset
+    g = np.asarray(rescale_error_buffers(e, 8)["w"])
+    assert g.shape == (8, 5)
+    np.testing.assert_array_equal(g[0], g[1])
+    np.testing.assert_array_equal(g[::2], np.asarray(e["w"]))
+    # shrink 4→2: pairwise means
+    s = np.asarray(rescale_error_buffers(e, 2)["w"])
+    np.testing.assert_allclose(
+        s, np.asarray(e["w"]).reshape(2, 2, 5).mean(1), rtol=1e-6)
+    # coprime 4→3: every buffer is the global mean
+    c = np.asarray(rescale_error_buffers(e, 3)["w"])
+    np.testing.assert_allclose(
+        c, np.broadcast_to(np.asarray(e["w"]).mean(0), (3, 5)), rtol=1e-6)
+    # the invariant all three branches share
+    for scaled in (g, s, c):
+        np.testing.assert_allclose(scaled.mean(0), np.asarray(e["w"]).mean(0),
+                                   rtol=1e-5)

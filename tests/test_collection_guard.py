@@ -1,0 +1,24 @@
+"""Collection hygiene guard (ISSUE 5 CI satellite).
+
+This repo's test dirs have no ``__init__.py`` (rootdir-style pytest
+layout), so two test modules with the same basename in different
+directories — e.g. ``tests/test_foo.py`` and ``tests/sim/test_foo.py`` —
+collide in ``sys.modules`` and abort collection with an import-mismatch
+error.  That bit us once (``test_rank_schedule.py``, 2026-07-30); this
+guard turns the pitfall into a named failure at the moment the duplicate
+is introduced, not a confusing collection crash later."""
+
+import collections
+import pathlib
+
+
+def test_no_duplicate_test_module_basenames():
+    root = pathlib.Path(__file__).resolve().parent
+    by_name = collections.defaultdict(list)
+    for path in sorted(root.rglob("test_*.py")):
+        by_name[path.name].append(path.relative_to(root.parent))
+    dups = {name: [str(p) for p in paths]
+            for name, paths in by_name.items() if len(paths) > 1}
+    assert not dups, (
+        "duplicate test-module basenames break pytest collection in this "
+        f"repo (no __init__.py in test dirs) — rename one of each: {dups}")

@@ -429,6 +429,26 @@ def comm_time(bytes_per_worker: float, workers: int, allreduce: bool,
     return (workers - 1) * bytes_per_worker / bw + lat * (workers - 1)
 
 
+def broadcast_time(bytes_root: float, workers: int,
+                   backend: str = "nccl_10gbit") -> float:
+    """Seconds for rank 0 to broadcast ``bytes_root`` to W−1 receivers.
+
+    Scatter + all-gather broadcast (van de Geijn): the bandwidth term is
+    half an all-reduce's, the latency term the same ⌈log2 W⌉ tree depth.
+    This is the extra per-aggregate leg ``sync_mode="broadcast"`` pays
+    (:class:`repro.core.dist.MeshCtx`) — flat in W on the wire, which is
+    exactly the ``fanout=1`` accounting ``CollectiveStats`` records for
+    ``kind="broadcast"`` entries.
+    """
+    import math
+
+    if workers <= 1:
+        return 0.0
+    rounds = math.ceil(math.log2(workers))
+    return ((workers - 1) / workers * bytes_root / BW[backend]
+            + LATENCY[backend] * rounds)
+
+
 def comm_time_from_stats(stats, workers: int,
                          backend: str = "nccl_10gbit") -> float:
     """Seconds of modeled gradient exchange for one recorded step.
@@ -442,7 +462,11 @@ def comm_time_from_stats(stats, workers: int,
     """
     total = 0.0
     for size, itemsize, kind in zip(stats.sizes, stats.itemsizes, stats.kinds):
-        total += comm_time(size * itemsize, workers, kind == "reduce", backend)
+        if kind == "broadcast":
+            total += broadcast_time(size * itemsize, workers, backend)
+        else:
+            total += comm_time(size * itemsize, workers, kind == "reduce",
+                               backend)
     return total
 
 

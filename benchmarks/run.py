@@ -55,6 +55,8 @@ def main() -> None:
         "resume_overhead": lambda: tables.resume_overhead(
             spec, ckpt_every=10 if args.quick else 20),
         "comm_profile": lambda: tables.comm_profile(params_small, specs_small),
+        "sync_mode_profile": lambda: tables.sync_mode_profile(
+            params_small, specs_small),
         "zoo_transport_profile": lambda: tables.zoo_transport_profile(
             params_small, specs_small),
         "appendixD_transformer": lambda: tables.appendixD_transformer(spec),

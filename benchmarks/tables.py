@@ -7,6 +7,7 @@ CSV and writes them under experiments/benchmarks/.
 from __future__ import annotations
 
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -407,6 +408,121 @@ def zoo_transport_profile(params, specs, workers: int = 16) -> list:
             "modeled_comm_ms_w%d" % workers:
                 round(comm_time_from_stats(stats, workers) * 1e3, 3),
         })
+    return rows
+
+
+_SYNC_MEASURE_SRC = '''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import sys
+import time
+sys.path.insert(0, @SRC@)
+import jax
+import jax.numpy as jnp
+from repro.configs.base import get_config
+from repro.data.synthetic import MarkovLM
+from repro.launch.train import TrainHyper, make_train_step
+out = {}
+for mode in ("allreduce", "broadcast"):
+    cfg = get_config("llama3-8b", reduced=True)
+    hyper = TrainHyper(lr=0.05, rank=2, q_chunk=64, warmup_steps=20,
+                       remat=False, sync_mode=mode)
+    mesh = jax.make_mesh((4, 1), ("data", "model"))
+    step_fn, _, init_state = make_train_step(cfg, mesh, hyper)
+    data = MarkovLM(vocab=cfg.vocab_size, seed=0)
+    with jax.set_mesh(mesh):
+        params, ef = init_state(jax.random.key(0))
+        times = []
+        for i in range(10):
+            toks = data.sample(8, 64, step=i)
+            batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                     "labels": jnp.asarray(toks[:, 1:].copy())}
+            t0 = time.time()
+            params, ef, met = step_fn(params, ef, batch, jax.random.key(1))
+            jax.block_until_ready(met["lm_loss"])
+            times.append(time.time() - t0)
+    out[mode] = sum(times[3:]) / len(times[3:])
+print("SYNC_MEASURE_JSON=" + json.dumps(out))
+'''
+
+
+def sync_mode_profile(params, specs, workers: int = 16) -> list:
+    """Beyond-paper: what replica-deterministic aggregation costs.
+
+    For each :class:`repro.core.dist.MeshCtx` ``sync_mode``, the fused
+    PowerSGD transport trace on a W=4 substrate (reduce vs broadcast
+    collectives and their wire bytes), the α-β modeled exchange time at
+    ``workers``, and the *measured* train-step time on a real 4-device
+    data-parallel ``shard_map`` mesh — the production backend the drift
+    suite (tests/sim/test_drift.py) certifies, run in a subprocess with
+    faked host devices.  Broadcast mode pays one extra fused rank-0
+    broadcast per step: bytes flat in W (``CollectiveStats`` records it
+    with fanout 1), ⌈log2 W⌉ extra latency rounds — the overhead column
+    quantifies exactly that in the α-β model.
+    """
+    import json
+    import subprocess
+    import sys as _sys
+
+    from benchmarks.common import comm_time_from_stats
+    from repro.core.compressors import make_compressor
+    from repro.core.dist import CollectiveStats
+    from repro.core.simmesh import SimMesh
+
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [_sys.executable, "-c",
+         _SYNC_MEASURE_SRC.replace("@SRC@", repr(src))],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    measured = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("SYNC_MEASURE_JSON="):
+            measured = json.loads(line.split("=", 1)[1])
+    if not measured:
+        print(f"sync_mode_profile: mesh measurement failed\n{proc.stderr}",
+              file=_sys.stderr)
+
+    key = jax.random.key(0)
+    shapes = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.ones_like(p) * 0.01, params)
+    sim = SimMesh(4, axis="dp")
+    rows = []
+    for mode in ("allreduce", "broadcast"):
+        comp = make_compressor("powersgd", rank=2)
+        stats = CollectiveStats()
+        state = comp.init(shapes, specs, key)
+
+        def step(g, s):
+            ctx = sim.ctx(stats=stats, sync_mode=mode)
+            return comp.step(g, s, specs, ctx=ctx, key=key).agg
+
+        sim.run(step, in_axes=(0, 0))(sim.replicate(grads),
+                                      sim.replicate(state))
+        reduce_b = sum(s * i for s, i, k in zip(stats.sizes, stats.itemsizes,
+                                                stats.kinds) if k == "reduce")
+        bcast_b = sum(s * i for s, i, k in zip(stats.sizes, stats.itemsizes,
+                                               stats.kinds)
+                      if k == "broadcast")
+        rows.append({
+            "sync_mode": mode,
+            "reduce_collectives": stats.reduce_collectives,
+            "broadcast_collectives": stats.broadcast_collectives,
+            "reduce_kb_per_step": round(reduce_b / 1024, 2),
+            "broadcast_kb_per_step": round(bcast_b / 1024, 2),
+            "modeled_comm_ms_w%d" % workers:
+                round(comm_time_from_stats(stats, workers) * 1e3, 3),
+            "measured_step_ms_mesh4x1":
+                round(measured[mode] * 1e3, 2) if mode in measured else None,
+        })
+    base = rows[0]["modeled_comm_ms_w%d" % workers]
+    for row in rows:
+        row["modeled_overhead_pct_w%d" % workers] = round(
+            100.0 * (row["modeled_comm_ms_w%d" % workers] - base) / base, 2)
     return rows
 
 

@@ -97,6 +97,13 @@ class HardwareModel:
             rounds = math.ceil(math.log2(workers))
             return (self.alpha * rounds
                     + 2 * (workers - 1) / workers * wire_bytes / self.bw)
+        if kind == "broadcast":
+            # scatter + all-gather broadcast (van de Geijn): half an
+            # all-reduce's bandwidth term, same tree depth in latency —
+            # the extra leg sync_mode="broadcast" pays per synced aggregate
+            rounds = math.ceil(math.log2(workers))
+            return (self.alpha * rounds
+                    + (workers - 1) / workers * wire_bytes / self.bw)
         # all-gather: a worker receives every other worker's payload
         return (self.alpha + wire_bytes / self.bw) * (workers - 1)
 

@@ -56,11 +56,38 @@ entry points:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _psum_identity_bwd(x, axes):
+    """``lax.psum`` forward, *identity* backward (Megatron's *f* operator).
+
+    ``lax.psum``'s own transpose is ``psum`` — the right adjoint when every
+    rank's output is a distinct loss contribution, but a ×W overcount under
+    this codebase's convention that the loss is *replicated* over the model
+    axis (every rank redundantly computes the same scalar).  A row-parallel
+    output reduce must then pass the (already-full, replicated) cotangent
+    straight through; the matching backward ``psum`` lives at the
+    replicated→sharded *entry* instead (:func:`repro.models.common.
+    grad_synced`)."""
+    return lax.psum(x, axes)
+
+
+def _psum_identity_bwd_fwd(x, axes):
+    return lax.psum(x, axes), None
+
+
+def _psum_identity_bwd_bwd(axes, _, ct):
+    return (ct,)
+
+
+_psum_identity_bwd.defvjp(_psum_identity_bwd_fwd, _psum_identity_bwd_bwd)
 
 
 @dataclasses.dataclass(eq=False)
@@ -84,6 +111,11 @@ class CollectiveStats:
     * ``"gather"`` — all-gather pattern: every worker contributes ``size``
       elements and *receives* ``fanout·size`` (fanout = W), so wire bytes
       scale with the data-parallel world size.
+    * ``"broadcast"`` — one-to-all pattern (``sync_mode="broadcast"``): the
+      root contributes ``size`` elements and every worker receives ``size``;
+      like a reduce, wire bytes are flat in W (a tree broadcast moves
+      ``(W−1)/W·size`` per link), so it is recorded at face value with
+      ``fanout=1``.
 
     ``itemsizes`` records the *actual* wire itemsize of each buffer (e.g. 2
     for a bfloat16 chunk, 1 for int8 sign payloads) — not a blanket float32
@@ -100,7 +132,7 @@ class CollectiveStats:
 
     def record(self, n_elems: int, itemsize: int = 4, kind: str = "reduce",
                fanout: int = 1) -> None:
-        assert kind in ("reduce", "gather"), kind
+        assert kind in ("reduce", "gather", "broadcast"), kind
         self.data_collectives += 1
         self.data_floats += int(n_elems)
         self.sizes.append(int(n_elems))
@@ -123,6 +155,10 @@ class CollectiveStats:
     @property
     def gather_collectives(self) -> int:
         return sum(1 for k in self.kinds if k == "gather")
+
+    @property
+    def broadcast_collectives(self) -> int:
+        return sum(1 for k in self.kinds if k == "broadcast")
 
     def bytes_per_collective(self) -> List[int]:
         """Wire bytes per collective, using each buffer's recorded dtype.
@@ -174,6 +210,22 @@ class CollectiveBackend:
     def axis_index(self, axis):
         raise NotImplementedError
 
+    def broadcast0(self, x, axes, index):
+        """Deliver rank 0's value to every rank along ``axes``.
+
+        Implemented as a masked *unweighted* ``psum`` (every non-root
+        contributes exact zeros), the standard one-to-all lowering on
+        all-reduce-only transports.  Deliberately NOT overridden by
+        :class:`SimBackend`: a broadcast is a control-plane replica sync,
+        not a data aggregation, so scenario weights never apply — a
+        weight-0 (dropped) root would otherwise destroy the payload.
+        Bit-stability note: summing one value with W−1 exact ``+0.0``
+        terms is exact in any association order, so this is bit-identical
+        across substrates and reduction orders (modulo ``−0.0 → +0.0``,
+        which both substrates flip identically).
+        """
+        return lax.psum(jnp.where(index == 0, x, jnp.zeros_like(x)), axes)
+
 
 class AxisBackend(CollectiveBackend):
     """Named-axis collectives against the enclosing shard_map/vmap env."""
@@ -208,6 +260,29 @@ class AxisBackend(CollectiveBackend):
 
 
 AXIS = AxisBackend()  # stateless — one shared instance
+
+
+def _tree_sum(stacked: jax.Array) -> jax.Array:
+    """Fixed pairwise-tree sum over the leading axis.
+
+    The canonical reduction order behind ``sync_mode="broadcast"``: every
+    rank gathers all W contributions in rank order and replays this exact
+    expression tree, so the result is bit-identical across ranks *by
+    construction* — and, because the tree is plain elementwise adds (which
+    XLA does not reassociate), bit-identical between the ``shard_map`` and
+    SimMesh substrates too.  This is the deterministic-allreduce recipe
+    (reduce in a fixed order at a root, broadcast the result) executed
+    redundantly on every rank instead of shipping the result separately.
+    """
+    n = stacked.shape[0]
+    while n > 1:
+        half = n // 2
+        paired = stacked[0:2 * half:2] + stacked[1:2 * half:2]
+        if n % 2:
+            paired = jnp.concatenate([paired, stacked[2 * half:]], axis=0)
+        stacked = paired
+        n = stacked.shape[0]
+    return stacked[0]
 
 
 def weighted_mean(x, w, sum_fn):
@@ -275,7 +350,32 @@ class MeshCtx:
 
     data_axes:  axes that carry data parallelism (gradient all-reduce),
                 e.g. ``("pod", "data")`` or ``("data",)``.
+    sync_mode:  how data-axis aggregates reach the ranks.  ``"allreduce"``
+                (default) trusts the substrate's all-reduce to hand every
+                rank the same value — true mathematically, but NOT at ULP
+                level on real meshes (XLA's reduction order can be
+                rank-dependent), which lets replicated state drift apart
+                bit-wise over steps.  ``"broadcast"`` makes every data-axis
+                aggregate replica-deterministic: contributions are gathered
+                in rank order and reduced in one canonical pairwise-tree
+                order (:func:`_tree_sum`) — logically a reduce-to-root
+                followed by a rank-0 broadcast, and recorded in
+                :class:`CollectiveStats` as those two legs (``"reduce"`` +
+                ``"broadcast"``).  Fused transports can suppress the
+                per-call broadcast leg (``sync=False``) and issue ONE real
+                end-of-step rank-0 broadcast instead
+                (:meth:`broadcast_flat`), keeping the collective budget at
+                reduces + 1 broadcast per step.
     model_axis: axis carrying tensor/expert parallelism, e.g. ``"model"``.
+    tp_grad_sync: whether :func:`repro.models.common.grad_synced` inserts
+                the model-axis ``psum`` on backward cotangents at
+                replicated→sharded boundaries.  ``True`` (default) is
+                required for correct gradients whenever ``model_axis`` is
+                set; ``False`` is a debug switch that reproduces the
+                historical per-rank partial gradients (replicated params
+                drift apart across model ranks — the divergence formerly
+                misattributed to all-reduce nondeterminism in
+                docs/checkpoint.md, pinned by tests/sim/test_drift.py).
     seq_axes:   axes over which a decode KV cache is sequence-sharded
                 (flash-decode softmax merge): ``("model",)`` for decode_32k,
                 ``("pod", "data", "model")`` for long_500k (batch=1).
@@ -292,10 +392,15 @@ class MeshCtx:
     data_axes: Tuple[str, ...] = ()
     model_axis: Optional[str] = None
     seq_axes: Tuple[str, ...] = ()
+    sync_mode: str = "allreduce"
+    tp_grad_sync: bool = True
     stats: Optional[CollectiveStats] = dataclasses.field(
         default=None, compare=False)
     backend: CollectiveBackend = dataclasses.field(
         default=AXIS, compare=False)
+
+    def __post_init__(self):
+        assert self.sync_mode in ("allreduce", "broadcast"), self.sync_mode
 
     def _record_data(self, x, kind: str = "reduce") -> None:
         if self.stats is not None:
@@ -303,18 +408,64 @@ class MeshCtx:
                 x.size, jnp.dtype(x.dtype).itemsize, kind=kind,
                 fanout=self.data_size() if kind == "gather" else 1)
 
-    # -- data-parallel collectives (gradient aggregation) ------------------
-    def psum_data(self, x):
-        self._record_data(x)
-        return self.backend.psum(x, self.data_axes) if self.data_axes else x
+    @property
+    def _synced(self) -> bool:
+        return self.sync_mode == "broadcast" and bool(self.data_axes)
 
-    def pmean_data(self, x):
+    def _canonical_reduce(self, x, *, mean: bool):
+        """Replica-deterministic data-axis sum/mean (``sync_mode="broadcast"``).
+
+        Gathers all W contributions in rank order and replays the fixed
+        pairwise-tree reduction (:func:`_tree_sum`) identically on every
+        rank — the result is bit-identical across ranks and across the
+        shard_map/SimMesh substrates.  Honors a weighted :class:`SimBackend`
+        with exactly :func:`weighted_mean`'s guarded-denominator semantics
+        (the zoo conformance contract).
+        """
+        stacked = self.backend.all_gather(x, self.data_axes,
+                                          gather_axis=0, tiled=False)
+        weight = getattr(self.backend, "weight", None)
+        if weight is None:
+            total = _tree_sum(stacked)
+            if not mean:
+                return total
+            return (total / self.data_size()).astype(x.dtype)
+        wvec = self.backend.all_gather(jnp.reshape(weight, ()),
+                                       self.data_axes,
+                                       gather_axis=0, tiled=False)
+        wb = wvec.reshape(wvec.shape + (1,) * x.ndim)
+        numer = _tree_sum(stacked * wb.astype(x.dtype))
+        if not mean:
+            return numer
+        total = _tree_sum(wvec)
+        denom = jnp.maximum(total, jnp.finfo(total.dtype).tiny)
+        return (numer.astype(total.dtype) / denom).astype(x.dtype)
+
+    # -- data-parallel collectives (gradient aggregation) ------------------
+    def psum_data(self, x, *, sync: Optional[bool] = None):
         self._record_data(x)
-        return self.backend.pmean(x, self.data_axes) if self.data_axes else x
+        if not self.data_axes:
+            return x
+        if self._synced:
+            if sync is not False:
+                self._record_data(x, kind="broadcast")
+            return self._canonical_reduce(x, mean=False)
+        return self.backend.psum(x, self.data_axes)
+
+    def pmean_data(self, x, *, sync: Optional[bool] = None):
+        self._record_data(x)
+        if not self.data_axes:
+            return x
+        if self._synced:
+            if sync is not False:
+                self._record_data(x, kind="broadcast")
+            return self._canonical_reduce(x, mean=True)
+        return self.backend.pmean(x, self.data_axes)
 
     def pmean_flat(self, parts: Sequence[jax.Array], *,
                    wire_dtype: str = "auto",
-                   max_chunk_bytes: Optional[int] = None) -> List[jax.Array]:
+                   max_chunk_bytes: Optional[int] = None,
+                   sync: Optional[bool] = None) -> List[jax.Array]:
         """Fused all-reduce-mean: O(1) collectives for a whole list of arrays.
 
         Ravels every part, concatenates into contiguous wire buffers (one per
@@ -331,6 +482,12 @@ class MeshCtx:
         share a chunk) — a mixed tree no longer silently upcasts a bfloat16
         payload because one float32 straggler rode along.  Each chunk's
         *actual* wire itemsize is recorded in :class:`CollectiveStats`.
+
+        Under ``sync_mode="broadcast"`` each chunk reduces in the canonical
+        deterministic order and records the extra ``"broadcast"`` leg;
+        ``sync=False`` keeps the canonical order but suppresses that record
+        — for multi-phase transports (PowerSGD's P/Q reduces) that issue
+        one fused end-of-step :meth:`broadcast_flat` instead.
         """
         from repro.core import matrixize  # local: dist must stay import-light
 
@@ -343,8 +500,41 @@ class MeshCtx:
         for chunk in plan.chunks:
             buf = matrixize.pack_flat(chunk, parts)
             self._record_data(buf)
-            if self.data_axes:
+            if self._synced:
+                if sync is not False:
+                    self._record_data(buf, kind="broadcast")
+                buf = self._canonical_reduce(buf, mean=True)
+            elif self.data_axes:
                 buf = self.backend.pmean(buf, self.data_axes)
+            out.update(matrixize.unpack_flat(chunk, buf))
+        return [out[i] for i in range(len(parts))]
+
+    def broadcast_flat(self, parts: Sequence[jax.Array], *,
+                       wire_dtype: str = "auto",
+                       max_chunk_bytes: Optional[int] = None) -> List[jax.Array]:
+        """Fused rank-0 broadcast: every part replaced by rank 0's copy.
+
+        The end-of-step replica-sync collective of ``sync_mode="broadcast"``:
+        parts are packed into wire chunks exactly like :meth:`pmean_flat`
+        and each chunk is delivered from rank 0 via the backend's masked
+        unweighted psum (:meth:`CollectiveBackend.broadcast0`).  Recorded
+        with ``kind="broadcast"``, bytes flat in W.  Outside any data axis
+        (and on already replica-identical inputs) this is the identity.
+        """
+        from repro.core import matrixize
+
+        parts = list(parts)
+        if not parts:
+            return []
+        plan = matrixize.plan_flat(parts, wire_dtype=wire_dtype,
+                                   max_chunk_bytes=max_chunk_bytes)
+        idx = self.data_index()
+        out: dict = {}
+        for chunk in plan.chunks:
+            buf = matrixize.pack_flat(chunk, parts)
+            self._record_data(buf, kind="broadcast")
+            if self.data_axes:
+                buf = self.backend.broadcast0(buf, self.data_axes, idx)
             out.update(matrixize.unpack_flat(chunk, buf))
         return [out[i] for i in range(len(parts))]
 
@@ -408,7 +598,13 @@ class MeshCtx:
 
     # -- model-parallel collectives (tensor parallelism) --------------------
     def psum_model(self, x):
-        return self.backend.psum(x, self.model_axis) if self.model_axis else x
+        if not self.model_axis:
+            return x
+        if self.tp_grad_sync and self.backend is AXIS:
+            # Megatron f: reduce forward, identity backward — paired with the
+            # backward psum grad_synced inserts at replicated→sharded entries
+            return _psum_identity_bwd(x, self.model_axis)
+        return self.backend.psum(x, self.model_axis)
 
     def pmean_model(self, x):
         return self.backend.pmean(x, self.model_axis) if self.model_axis else x

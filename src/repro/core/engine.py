@@ -161,10 +161,24 @@ class Transport:
     wire_dtype: str = "auto"            # "auto" | "float32" | "bfloat16"
     max_chunk_bytes: Optional[int] = None
 
-    def reduce_mean(self, parts: Sequence[jax.Array]) -> List[jax.Array]:
-        """Fused all-reduce-mean (O(1) collectives; linear payloads)."""
+    def reduce_mean(self, parts: Sequence[jax.Array],
+                    sync: Optional[bool] = None) -> List[jax.Array]:
+        """Fused all-reduce-mean (O(1) collectives; linear payloads).
+
+        ``sync=False`` (meaningful under ``sync_mode="broadcast"`` only)
+        marks this reduce as an *internal phase* of a multi-reduce scheme:
+        it still uses the canonical deterministic reduction order but does
+        not record a per-call broadcast leg — the scheme ends with one
+        fused :meth:`broadcast` instead."""
         return self.ctx.pmean_flat(parts, wire_dtype=self.wire_dtype,
-                                   max_chunk_bytes=self.max_chunk_bytes)
+                                   max_chunk_bytes=self.max_chunk_bytes,
+                                   sync=sync)
+
+    def broadcast(self, parts: Sequence[jax.Array]) -> List[jax.Array]:
+        """Fused rank-0 broadcast — the end-of-step replica sync of
+        ``sync_mode="broadcast"`` (see :meth:`MeshCtx.broadcast_flat`)."""
+        return self.ctx.broadcast_flat(parts, wire_dtype=self.wire_dtype,
+                                       max_chunk_bytes=self.max_chunk_bytes)
 
     def gather(self, parts: Sequence[jax.Array]) -> List[jax.Array]:
         """Fused all-gather (O(1) collectives; non-linear payloads).  Every

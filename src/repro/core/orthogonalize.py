@@ -1,13 +1,25 @@
 """Orthogonalization of tall-skinny matrices (the P factor in PowerSGD).
 
-Two implementations:
+Three implementations:
 
-* ``gram_schmidt`` — the paper's choice (Alg. 1 line 5).  Sequential over the
-  r columns; faithful reproduction.
+* ``gram_schmidt`` — the paper's choice (Alg. 1 line 5), hardened for
+  replica determinism: scale-invariant (per-column max-abs prescale, so the
+  guard needs no absolute epsilon and ~1e-20 early-training gradients
+  normalize exactly like O(1) ones) and ULP-guarded (a residual column whose
+  norm falls below the dtype's post-projection rounding floor is numerically
+  rank-deficient — pure noise — and becomes an *exact zero* column instead
+  of normalized noise).  That floor is what stops ULP-level input
+  differences across data ranks from being amplified into O(1) factor
+  divergence: normalizing a noise-dominated residual is a divide-by-ULP.
 * ``cholesky_qr`` — TPU adaptation (beyond-paper): ``R = chol(PᵀP + εI)``,
   ``P̂ = P R⁻ᵀ``.  Two tall-skinny matmuls that map onto the MXU instead of a
   sequential column loop.  Numerically adequate because r ≤ 32 here and we
   regularise the Gram matrix.
+* ``gs_cholqr`` — ``gram_schmidt`` with a per-matrix CholeskyQR2 stability
+  fallback: when the Gram-Schmidt output's Gram matrix is not a projector
+  to within a dtype-ULP budget (ill-conditioned P where sequential MGS
+  loses orthogonality as κ·ulp), that batch element is replaced by the
+  CholeskyQR2 result.
 
 Both operate on arrays of shape ``(..., n, r)`` and are *batched*: leading
 dims (layer-stacked / expert-stacked parameters, or the ``(B, n, r)`` slabs
@@ -30,12 +42,33 @@ _EPS = 1e-8
 
 
 def gram_schmidt(p: jax.Array, eps: float = _EPS) -> jax.Array:
-    """Modified Gram-Schmidt over the last axis' columns.  Shape (..., n, r)."""
-    r = p.shape[-1]
+    """Modified Gram-Schmidt over the last axis' columns.  Shape (..., n, r).
+
+    Scale-invariant: each column is prescaled by its max-abs entry (exactly
+    invariant under power-of-two rescaling of the input), so a nonzero
+    column enters the loop with norm in [1, √n] and every guard threshold
+    can be stated in dtype ULPs rather than as an absolute epsilon.  A
+    residual column whose squared norm falls below the post-projection
+    rounding floor ``n·(32·ulp)²`` is numerically rank-deficient and is
+    zeroed exactly — never normalized — so near-dependent and all-zero
+    columns produce exact-zero output columns instead of NaN or amplified
+    noise.  ``eps`` is retained for signature compatibility and unused.
+    """
+    del eps  # the guard scales with dtype ULP, not an absolute epsilon
+    n, r = p.shape[-2], p.shape[-1]
+    ulp = float(jnp.finfo(p.dtype).eps)
+    floor = n * (32.0 * ulp) ** 2
+
+    scale = jnp.max(jnp.abs(p), axis=-2, keepdims=True)            # (..., 1, r)
+    m = p / jnp.where(scale > 0, scale, jnp.ones_like(scale))
 
     def body(i, m):
         col = lax.dynamic_slice_in_dim(m, i, 1, axis=-1)          # (..., n, 1)
-        col = col * lax.rsqrt(jnp.sum(col * col, axis=-2, keepdims=True) + eps)
+        nrm2 = jnp.sum(col * col, axis=-2, keepdims=True)
+        inv = jnp.where(nrm2 > floor,
+                        lax.rsqrt(jnp.maximum(nrm2, floor)),
+                        jnp.zeros_like(nrm2))
+        col = col * inv
         # remove the projection of the remaining columns on `col`
         proj = jnp.sum(col * m, axis=-2, keepdims=True)            # (..., 1, r)
         # only update columns j > i; column i itself becomes the normalised col
@@ -45,7 +78,7 @@ def gram_schmidt(p: jax.Array, eps: float = _EPS) -> jax.Array:
         m = lax.dynamic_update_slice_in_dim(m, col, i, axis=-1)
         return m
 
-    return lax.fori_loop(0, r, body, p)
+    return lax.fori_loop(0, r, body, m)
 
 
 def _cholesky_qr_once(p: jax.Array, eps: float) -> jax.Array:
@@ -80,9 +113,30 @@ def cholesky_qr(p: jax.Array, eps: float = _EPS) -> jax.Array:
     return _cholesky_qr_once(_cholesky_qr_once(p, eps), eps)
 
 
+def gs_cholqr(p: jax.Array, eps: float = _EPS) -> jax.Array:
+    """``gram_schmidt`` with a per-matrix CholeskyQR2 stability fallback.
+
+    Accepts the Gram-Schmidt result when its Gram matrix ``G = QᵀQ`` is a
+    projector (``‖G² − G‖_max`` within a dtype-ULP budget — this treats
+    exact-zero columns from rank-deficient input as valid, where a plain
+    ``‖G − I‖`` check would not); otherwise that batch element falls back
+    to CholeskyQR2.  Both candidates are computed (the select is per batch
+    element under jit), so this costs one extra orthogonalization pass —
+    use it when P may be ill-conditioned enough for sequential MGS to lose
+    orthogonality, not as the default.
+    """
+    q = gram_schmidt(p)
+    gram = jnp.einsum("...nr,...ns->...rs", q, q)
+    resid = jnp.einsum("...rs,...st->...rt", gram, gram) - gram
+    err = jnp.max(jnp.abs(resid), axis=(-2, -1))                   # (...,)
+    tol = 1024.0 * float(jnp.finfo(p.dtype).eps)
+    return jnp.where((err <= tol)[..., None, None], q, cholesky_qr(p, eps))
+
+
 ORTHOGONALIZERS = {
     "gram_schmidt": gram_schmidt,
     "cholesky_qr": cholesky_qr,
+    "gs_cholqr": gs_cholqr,
 }
 
 

@@ -566,18 +566,30 @@ def _compress_aggregate_bucketed(
     m_bufs, q_bufs = payloads.m_bufs, payloads.q_bufs
 
     # -- power iteration: 2 fused collectives per round ---------------------
+    # Under sync_mode="broadcast" the per-phase reduces run in the canonical
+    # deterministic order but defer the replica-sync guarantee (sync=False)
+    # to ONE fused rank-0 broadcast of everything the cross-step state and
+    # the update are computed from — P̂, Q and the uncompressed aggregates —
+    # keeping the per-step budget at 2 reduces + 1 broadcast.
+    synced = ctx.sync_mode == "broadcast" and bool(ctx.data_axes)
     unc_agg = payloads.unc_values  # identity if no uncompressed leaves
     p_hats = q_locals = []
     for it in range(n_iter):
         p_locals = [project(mb, qb) for mb, qb in zip(m_bufs, q_bufs)]
         extra = unc_agg if it == 0 else []
-        reduced = transport.reduce_mean(p_locals + extra)
+        reduced = transport.reduce_mean(p_locals + extra, sync=False)
         p_bufs = reduced[:len(p_locals)]
         if it == 0:
             unc_agg = reduced[len(p_locals):]
         p_hats = [orth(p) for p in p_bufs]
         q_locals = [backproject(mb, ph) for mb, ph in zip(m_bufs, p_hats)]
-        q_bufs = transport.reduce_mean(q_locals)
+        q_bufs = transport.reduce_mean(q_locals, sync=False)
+
+    if synced:
+        flat = transport.broadcast(p_hats + q_bufs + unc_agg)
+        p_hats = flat[:len(p_hats)]
+        q_bufs = flat[len(p_hats):len(p_hats) + len(q_bufs)]
+        unc_agg = flat[len(p_hats) + len(q_bufs):]
 
     agg_bufs = [jnp.einsum("bnr,bmr->bnm", ph, qb)
                 for ph, qb in zip(p_hats, q_bufs)]

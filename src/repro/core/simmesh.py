@@ -58,16 +58,28 @@ class SimMesh:
 
     # -- contexts -----------------------------------------------------------
     def ctx(self, weight: Optional[jax.Array] = None,
-            stats: Optional[CollectiveStats] = None) -> MeshCtx:
+            stats: Optional[CollectiveStats] = None,
+            sync_mode: str = "allreduce") -> MeshCtx:
         """A :class:`MeshCtx` for code running inside :meth:`run`.
 
         ``weight`` — this worker's scalar contribution weight (traced, one
         per worker under the vmap); ``None`` = uniform (plain means).
         Construct the context *inside* the mapped function so a traced
         weight binds to the right trace.
+
+        ``sync_mode="broadcast"`` selects the canonical deterministic
+        reduction order (see :class:`~repro.core.dist.MeshCtx`) — on this
+        substrate collectives are already bit-deterministic, but the
+        canonical order makes every *collective result* bit-identical to a
+        ``shard_map`` run in the same mode.  Whole training steps still
+        differ at the ULP level between the two substrates (XLA lowers the
+        vmapped compute differently); the cross-substrate equivalence suite
+        (``tests/subprocess_scripts/check_drift.py``, ``equiv`` phase) pins
+        that envelope at ~5e-7 after 8 steps.
         """
         return MeshCtx(
             data_axes=(self.axis,),
+            sync_mode=sync_mode,
             stats=stats,
             backend=SimBackend(axis=self.axis, size=self.workers,
                                weight=weight),

@@ -53,12 +53,49 @@ class TrainHyper:
     #   switch retraces the jitted step): build a RankController from the
     #   compressor and transition ef.comp between steps — see main() below.
     track_residual: bool = False    # emit residual_ratio in the step metrics
+    sync_mode: str = "allreduce"    # "broadcast" = replica-deterministic
+    #   data-axis aggregation (canonical reduction order + rank-0 broadcast;
+    #   see repro.core.dist.MeshCtx.sync_mode) — bit-identical replicas on
+    #   substrates whose all-reduce is rank-dependent at ULP level
+    track_drift: bool = False       # emit drift_{params,momentum,error,q}
+    #   metrics: max abs cross-data-rank divergence of the step's outputs
+    tp_grad_sync: bool = True       # model-axis psum on backward cotangents
+    #   at replicated→sharded boundaries (common.grad_synced).  False is a
+    #   debug switch reproducing the legacy per-rank partial gradients whose
+    #   cross-model drift docs/checkpoint.md once misread as all-reduce
+    #   nondeterminism — pinned by tests/sim/test_drift.py.
 
 
 def _schedule(hyper: TrainHyper, step):
     from repro.optim import schedules
 
     return schedules.linear_warmup(step, hyper.lr, hyper.warmup_steps, 0.1)
+
+
+def replica_drift(ctx: MeshCtx, tree) -> jax.Array:
+    """Max abs divergence of ``tree``'s float leaves across the data ranks.
+
+    The drift probe behind ``TrainHyper.track_drift``: every rank compares
+    its copy against rank 0's (delivered by the backend's masked-psum
+    broadcast — called on the backend directly, so the probe never perturbs
+    :class:`~repro.core.dist.CollectiveStats` budgets) and the worst
+    divergence is ``pmax``-reduced back to every rank.  Exactly ``0.0``
+    certifies bit-identical replicas for these leaves this step; under
+    ``sync_mode="allreduce"`` on rank-dependent substrates it exposes the
+    ULP-seeded divergence documented in ``docs/checkpoint.md``.  Works
+    unchanged under ``shard_map`` and SimMesh.  Observability only.
+    """
+    drifts = []
+    idx = ctx.data_index()
+    for x in jax.tree_util.tree_leaves(tree):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            continue
+        x = x.astype(jnp.float32)
+        ref = ctx.backend.broadcast0(x, ctx.data_axes, idx)
+        drifts.append(jnp.max(jnp.abs(x - ref)))
+    if not drifts:
+        return jnp.zeros((), jnp.float32)
+    return ctx.backend.pmax(jnp.max(jnp.stack(drifts)), ctx.data_axes)
 
 
 def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
@@ -70,7 +107,9 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
     dp_axes = mesh_lib.data_axes(mesh)
     maxis = mesh_lib.model_axis(mesh)
     model_shards = mesh.shape[maxis]
-    ctx = MeshCtx(data_axes=dp_axes, model_axis=maxis)
+    ctx = MeshCtx(data_axes=dp_axes, model_axis=maxis,
+                  sync_mode=hyper.sync_mode,
+                  tp_grad_sync=hyper.tp_grad_sync)
     all_axes = tuple(mesh.axis_names)
 
     if compressor is None:
@@ -112,6 +151,15 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
         if "residual_ratio" in aux:  # host-side RankControllers read this
             metrics["residual_ratio"] = aux["residual_ratio"]
         metrics = {k: lax.pmean(v, all_axes) for k, v in metrics.items()}
+        if hyper.track_drift and dp_axes:
+            # added after the metrics pmean: already cross-rank reduced
+            # (pmax over data, then over all axes so the output replicates)
+            for name, tree in (("params", new_params),
+                               ("momentum", new_state.momentum),
+                               ("error", new_state.error),
+                               ("q", new_state.comp)):
+                metrics[f"drift_{name}"] = lax.pmax(
+                    replica_drift(ctx, tree), all_axes)
         metrics["lr"] = lr
         return new_params, new_state, metrics
 
@@ -214,7 +262,7 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
     def worker_step(params, ef_state, batch, key, weight):
         # ctx is built inside the mapped function so the traced per-worker
         # weight binds to this trace
-        ctx = sim.ctx(weight=weight, stats=stats)
+        ctx = sim.ctx(weight=weight, stats=stats, sync_mode=hyper.sync_mode)
 
         def loss_fn(p):
             return model.loss_fn(p, batch, cfg, ctx, window=hyper.window,
@@ -237,6 +285,12 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
             metrics["residual_ratio"] = aux["residual_ratio"]
         metrics = {k: ctx.backend.pmean(v, ctx.data_axes)
                    for k, v in metrics.items()}
+        if hyper.track_drift:
+            for name, tree in (("params", new_params),
+                               ("momentum", new_state.momentum),
+                               ("error", new_state.error),
+                               ("q", new_state.comp)):
+                metrics[f"drift_{name}"] = replica_drift(ctx, tree)
         metrics["lr"] = lr
         return new_params, new_state, metrics
 
@@ -291,6 +345,11 @@ def main():
                          "'residual:min=1,max=8,init=4' (see "
                          "repro.core.powersgd.parse_schedule)")
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--sync-mode", default="allreduce",
+                    choices=("allreduce", "broadcast"),
+                    help="'broadcast' makes every data-axis aggregate "
+                         "replica-deterministic (canonical reduction order "
+                         "+ rank-0 broadcast; see docs/checkpoint.md)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -319,7 +378,8 @@ def main():
 
     hyper = TrainHyper(lr=args.lr, rank=args.rank, q_chunk=64,
                        warmup_steps=20, remat=False,
-                       rank_schedule=args.rank_schedule)
+                       rank_schedule=args.rank_schedule,
+                       sync_mode=args.sync_mode)
     compressor = PowerSGDCompressor(
         rank=args.rank, rank_schedule=args.rank_schedule)
     step_fn, _, init_state = make_train_step(cfg, m, hyper,

@@ -100,6 +100,10 @@ def forward(params, x, cfg: ModelConfig, ctx: MeshCtx, *, q_chunk: int = 512,
     local_kv = (cfg.tp_local_kv and cfg.num_kv_heads % shards == 0
                 and cfg.num_heads % shards == 0)
 
+    # replicated x enters the column-parallel projections here: identity
+    # forward, psum(model) on the backward cotangent (see common.grad_synced)
+    x = common.grad_synced(x, ctx)
+
     q = (x @ params["wq"]).reshape(b, s, hl, hd)
     if local_kv:
         # kv heads shard evenly: shard m owns q heads [m·hl, (m+1)·hl) and

@@ -18,6 +18,7 @@ functions run unsharded (single CPU device) and sharded (inside shard_map).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Optional, Tuple
 
@@ -67,6 +68,53 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# TP gradient synchronisation (the Megatron "g" operator)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _identity_psum_grad(x, axis: str):
+    return x
+
+
+def _identity_psum_grad_fwd(x, axis):
+    return x, None
+
+
+def _identity_psum_grad_bwd(axis, _, ct):
+    return (lax.psum(ct, axis),)
+
+
+_identity_psum_grad.defvjp(_identity_psum_grad_fwd, _identity_psum_grad_bwd)
+
+
+def grad_synced(x, ctx: MeshCtx):
+    """Identity forward; ``psum(model)`` backward (Megatron's *g* operator).
+
+    Wrap a model-replicated activation exactly where it enters rank-local
+    sharded compute (column-parallel projections, expert dispatch, the SSD
+    scan, the vocab-sharded head).  Each model rank's backward pass produces
+    only the cotangent of *its* shard's consumption; ``lax.psum``'s transpose
+    is the identity, so without this wrap every cotangent flowing back into
+    the replicated residual stream — and every replicated parameter's
+    gradient — is a per-rank partial sum: wrong, and different on every
+    model rank (replicated state then drifts apart step over step).
+
+    Placement rule: every backward path from the loss to a replicated value
+    must cross exactly one ``grad_synced`` — none double-counts by W, two
+    double-count too.  Paths that stay in replicated math (identical compute
+    on every rank, e.g. the MoE aux loss) already carry the full cotangent
+    and must bypass the wrap.
+
+    No-op when there is no model axis (SimMesh, single device) or when
+    ``ctx.tp_grad_sync`` is off (a debug switch that reproduces the legacy
+    divergence — see tests/sim/test_drift.py).
+    """
+    if ctx.model_axis is None or not ctx.tp_grad_sync:
+        return x
+    return _identity_psum_grad(x, ctx.model_axis)
 
 
 # ---------------------------------------------------------------------------

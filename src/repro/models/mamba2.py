@@ -85,7 +85,9 @@ def mspecs(cfg: ModelConfig):
 def _sharded_gated_rmsnorm(y, z, scale, ctx: MeshCtx, d_inner_global, eps=1e-6):
     y = y * jax.nn.silu(z)
     ss = jnp.sum(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
-    ss = ctx.psum_model(ss) / d_inner_global
+    # the replicated mean-square is consumed by every rank's local y path:
+    # its true cotangent is the sum of the per-rank partials
+    ss = common.grad_synced(ctx.psum_model(ss) / d_inner_global, ctx)
     return (y * lax.rsqrt(ss + eps)).astype(y.dtype) * scale
 
 
@@ -107,12 +109,17 @@ def forward(params, x, cfg: ModelConfig, ctx: MeshCtx, *, chunk: int = 64):
     hl = params["wdt"].shape[1]              # local head count
     di_local = hl * p
 
-    z = x @ params["wz"]                                     # (B, S, di_l)
-    xs = x @ params["wx"]
+    # x enters the column-parallel projections (wz/wx/wdt) here; the
+    # replicated B/C projections feed the rank-local SSD scan, so each gets
+    # its own backward psum *after* the matmul — computed from the raw x so
+    # the cotangent reaching x through wB/wC is not summed twice.
+    x_loc = common.grad_synced(x, ctx)
+    z = x_loc @ params["wz"]                                 # (B, S, di_l)
+    xs = x_loc @ params["wx"]
     xs = jax.nn.silu(_causal_depthwise_conv(xs, params["conv_x"]))
-    bmat = x @ params["wB"]                                  # (B, S, N) replicated
-    cmat = x @ params["wC"]
-    dt = jax.nn.softplus((x @ params["wdt"]) + params["dt_bias"])  # (B, S, hl)
+    bmat = common.grad_synced(x @ params["wB"], ctx)         # (B, S, N) replicated
+    cmat = common.grad_synced(x @ params["wC"], ctx)
+    dt = jax.nn.softplus((x_loc @ params["wdt"]) + params["dt_bias"])  # (B, S, hl)
     a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))     # (hl,)
 
     xh = xs.reshape(b, s, hl, p)

@@ -36,6 +36,7 @@ def mspecs(cfg: ModelConfig):
 
 def forward(params, x, cfg: ModelConfig, ctx: MeshCtx):
     """x: (B, S, d) replicated over the model axis; output likewise."""
+    x = common.grad_synced(x, ctx)
     gate = jax.nn.silu(x @ params["w_gate"])
     up = x @ params["w_up"]
     return ctx.psum_model((gate * up) @ params["w_down"])

@@ -108,7 +108,7 @@ def loss_fn(params, batch, cfg: ModelConfig, ctx: MeshCtx = SINGLE, *,
         # patches carry no LM loss; score only the text suffix
         n_img = batch["patches"].shape[1]
         x = x[:, n_img:]
-    logits_local = x @ params["head"]
+    logits_local = common.grad_synced(x, ctx) @ params["head"]
     tok_loss = common.sharded_softmax_xent(logits_local, labels, ctx, cfg.vocab_size)
     mask = (labels >= 0).astype(jnp.float32)
     loss = jnp.sum(tok_loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -4,8 +4,9 @@ expert parallelism over the ``model`` axis.
 Activations are replicated within a model group (Megatron pattern), so each
 shard holds E/model_shards experts and processes the tokens routed to *its*
 experts — no all-to-all is required; expert outputs combine with one
-``psum(model)``.  The router is replicated (its gradient is identical on all
-model shards by construction).
+``psum(model)``.  The router is replicated; ``common.grad_synced`` on the
+gate path sums the per-rank partial cotangents so its gradient is the full
+value, identical on all model shards.
 
 Dispatch uses the standard capacity-factor scheme: per expert, the first
 C = ceil(T·k/E · cf) routed tokens are kept, the rest are dropped (their
@@ -88,12 +89,17 @@ def forward(params, x, cfg: ModelConfig, ctx: MeshCtx, *, dropless: bool = False
 
     xt = x.reshape(t, d)
     logits = (xt @ params["router"]).astype(jnp.float32)      # (T, E)
-    probs = jax.nn.softmax(logits, axis=-1)
+    # The gates are consumed inside the rank-local dispatch/combine below, so
+    # every rank's backward produces only its experts' share of the gate
+    # cotangent — grad_synced restores the full router gradient (identical on
+    # all model shards).  The aux loss is replicated math (its cotangent is
+    # already full on every rank) and must read the *unwrapped* logits.
+    probs = jax.nn.softmax(common.grad_synced(logits, ctx), axis=-1)
     gates, experts = lax.top_k(probs, k)                      # (T, k)
     gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
 
     # ---- aux load-balance loss (replicated; computed from local tokens) ----
-    me = jnp.mean(probs, axis=0)                              # (E,)
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)    # (E,)
     ce = jnp.zeros((e,)).at[experts.reshape(-1)].add(
         jnp.ones((t * k,)) / (t * k))
     aux = e * jnp.sum(me * ce)
@@ -110,8 +116,9 @@ def forward(params, x, cfg: ModelConfig, ctx: MeshCtx, *, dropless: bool = False
     local = (fe >= lo) & (fe < lo + e_local) & keep
     slot = jnp.where(local, (fe - lo) * cap + pos, e_local * cap)  # dump slot
     token_of = jnp.repeat(jnp.arange(t), k)
+    xt_local = common.grad_synced(xt, ctx)    # entering rank-local experts
     buf = jnp.zeros((e_local * cap + 1, d), x.dtype)
-    buf = buf.at[slot].add(jnp.where(local[:, None], xt[token_of], 0.0))
+    buf = buf.at[slot].add(jnp.where(local[:, None], xt_local[token_of], 0.0))
     h = buf[: e_local * cap].reshape(e_local, cap, d)
 
     # ---- expert FFNs (SwiGLU) ---------------------------------------------

@@ -1,0 +1,66 @@
+"""Slow tier: the cross-substrate drift-tracking suite (ISSUE 6 tentpole).
+
+Promotes the ``docs/checkpoint.md`` substrate-caveat repro into committed
+regression tests on a real fake-device mesh (subprocess, 8 host devices —
+XLA locks the device count at first init, so these cannot run in-process):
+
+* the historical divergence *reproduces* under ``tp_grad_sync=False`` and
+  is a cross-MODEL effect (per-rank partial/×W-inflated TP gradients), not
+  data-axis all-reduce nondeterminism — cross-data drift is 0.0 even under
+  plain all-reduce on this substrate;
+* with the Megatron f/g gradient fix (default) and ``sync_mode=
+  "broadcast"``, ≥50 uninterrupted steps keep params and momentum
+  bit-identical across the whole mesh and Q factors bit-identical across
+  data ranks (across model ranks each holds its own shard's factors);
+* SimMesh and ``shard_map`` track each other under broadcast mode to a few
+  f32 ULPs (collectives bit-identical; local vmap-vs-per-device compute
+  reassociates a handful of sums — see check_drift.py for the measured
+  envelope).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = [pytest.mark.slow, pytest.mark.timeout(1200)]
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "..", "subprocess_scripts",
+                      "check_drift.py")
+
+
+def _run(phase, timeout=1100):
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, phase],
+        capture_output=True, text=True, timeout=timeout,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"check_drift.py {phase} failed\nstdout:\n{proc.stdout}\n"
+            f"stderr:\n{proc.stderr}")
+    return proc.stdout
+
+
+def test_legacy_divergence_is_cross_model():
+    """Guards the corrected diagnosis of the docs/checkpoint.md caveat: with
+    ``tp_grad_sync=False`` the documented drift reproduces across MODEL
+    ranks while data ranks stay bit-identical."""
+    out = _run("legacy")
+    assert "LEGACY_DRIFT_OK" in out
+
+
+def test_replicas_bit_identical_under_broadcast():
+    """The acceptance bar: ≥50 uninterrupted steps under
+    sync_mode="broadcast" with bit-identical replicas (params, momentum,
+    EF buffers, Q factors), in-metric drift probes reading exactly 0.0."""
+    out = _run("broadcast")
+    assert "DRIFT_VANISHES_OK" in out
+
+
+def test_simmesh_matches_shard_map_under_broadcast():
+    """Cross-substrate equivalence: SimMesh W=4 ≡ shard_map (4,1) to a few
+    f32 ULPs, with within-substrate bit-exactness on both sides."""
+    out = _run("equiv")
+    assert "SUBSTRATE_EQUIV_OK" in out

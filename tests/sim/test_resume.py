@@ -8,11 +8,13 @@ step counter, rank-controller position, base PRNG key and data cursor.
 fresh jitted step, fresh controller) and restoring only from the envelope
 bytes, exactly what a new process does.
 
-Also pinned here: the *elastic* resume contract — restoring a W=1 run into
-W=4 workers duplicates the error buffers (worker-mean preserved, see
-``rescale_error_buffers``), so the continuation tracks the uninterrupted
-run within the Lemma-3 linearity tolerance rather than bit-exactly — and
-corrupted/truncated envelope rejection end-to-end."""
+Also pinned here: the *elastic* resume contract — restoring into a
+different worker count rescales the error buffers worker-mean-preservingly
+(W=1→4 duplicates, W=4→2 pairwise-averages; see ``rescale_error_buffers``),
+so the continuation tracks the uninterrupted run within the Lemma-3
+linearity tolerance rather than bit-exactly; the rescaled continuation runs
+under ``sync_mode="broadcast"`` so its workers are bit-identical by
+construction — and corrupted/truncated envelope rejection end-to-end."""
 
 import os
 
@@ -38,11 +40,12 @@ STEPS, CKPT_AT = 8, 4
 LINEARITY_TOL = 5e-5  # f32 reassociation across the worker-mean
 
 
-def build(workers, schedule=None):
+def build(workers, schedule=None, sync_mode="allreduce"):
     """A fresh "process": new compressor, new jitted step, new controller."""
     cfg = get_config("llama3-8b", reduced=True)
     hyper = TrainHyper(q_chunk=32, warmup_steps=5, remat=False,
-                       weight_decay=0.0, rank_schedule=schedule)
+                       weight_decay=0.0, rank_schedule=schedule,
+                       sync_mode=sync_mode)
     compressor = PowerSGDCompressor(rank=2, rank_schedule=schedule)
     sim = SimMesh(workers)
     step_fn, init_state = make_sim_train_step(cfg, sim, hyper,
@@ -81,9 +84,10 @@ def save_at(tmpdir, sim, params, ef, controller=None, schedule=None,
         extra_meta={"rank_schedule": schedule, "last_residual": residual})
 
 
-def restore_into(tmpdir, workers, schedule=None):
+def restore_into(tmpdir, workers, schedule=None, sync_mode="allreduce"):
     """The resumed process: rebuild from config, restore, re-replicate."""
-    cfg, sim, step_fn, init_state, controller = build(workers, schedule)
+    cfg, sim, step_fn, init_state, controller = build(workers, schedule,
+                                                      sync_mode)
     p0, e0 = init_state(KEY)
     template = TrainState(*canonicalize_sim(sim, p0, e0), key=KEY,
                           data_step=jnp.zeros((), jnp.int32))
@@ -172,26 +176,43 @@ def test_resume_bit_exact_mid_staircase(tmp_path):
 
 
 def test_elastic_resume_1_to_4(fixed_rank_runs, tmp_path):
-    """Restore a W=1 checkpoint into W=4 workers: error buffers duplicate
-    bit-exactly (worker-mean preserved), the continuation tracks the
-    uninterrupted W=1 run within the Lemma-3 linearity tolerance, and the
-    workers stay bit-identical."""
-    w, ckdir, (ref_losses, ref_params) = fixed_rank_runs
-    if w != 1:
-        pytest.skip("elastic source is the W=1 checkpoint")
+    """Elastic worker-count rescale, both fixture arms (ISSUE 6 re-enabled
+    the long-skipped W4 arm under ``sync_mode="broadcast"``):
 
-    cfg, sim, step_fn, _, params, ef, meta = restore_into(ckdir, 4)
-    assert meta["workers"] == 1
-    # grow semantics: every worker starts from the W=1 buffer, bit-exactly
+    * W1 arm — grow: restore the W=1 checkpoint into W=4 workers; error
+      buffers duplicate bit-exactly (worker-mean preserved).
+    * W4 arm — shrink: restore the W=4 checkpoint into W=2 workers; each
+      new buffer is bit-exactly the mean of the two it absorbs.
+
+    Either way the continuation runs under ``sync_mode="broadcast"`` (the
+    canonical deterministic aggregation order, so the replicated-worker
+    invariant is guaranteed rather than substrate luck), stays bit-identical
+    across workers, and tracks the uninterrupted source-W run within the
+    Lemma-3 linearity tolerance."""
+    w, ckdir, (ref_losses, ref_params) = fixed_rank_runs
+    w_new = 4 if w == 1 else 2
+
+    cfg, sim, step_fn, _, params, ef, meta = restore_into(
+        ckdir, w_new, sync_mode="broadcast")
+    assert meta["workers"] == w
     src, _ = restore_train_state(
         str(ckdir),
-        TrainState(*canonicalize_sim(SimMesh(1), *_fresh_state(1)), key=KEY,
+        TrainState(*canonicalize_sim(SimMesh(w), *_fresh_state(w)), key=KEY,
                    data_step=jnp.zeros((), jnp.int32)))
-    for e4, e1 in zip(jax.tree_util.tree_leaves(ef.error),
-                      jax.tree_util.tree_leaves(src.ef.error)):
-        for wk in range(4):
-            np.testing.assert_array_equal(np.asarray(e4[wk]),
-                                          np.asarray(e1[0]))
+    if w == 1:
+        # grow semantics: every worker starts from the W=1 buffer, bit-exact
+        for e4, e1 in zip(jax.tree_util.tree_leaves(ef.error),
+                          jax.tree_util.tree_leaves(src.ef.error)):
+            for wk in range(w_new):
+                np.testing.assert_array_equal(np.asarray(e4[wk]),
+                                              np.asarray(e1[0]))
+    else:
+        # shrink semantics: new worker k absorbs source workers 2k, 2k+1
+        for e2, e4 in zip(jax.tree_util.tree_leaves(ef.error),
+                          jax.tree_util.tree_leaves(src.ef.error)):
+            for wk in range(w_new):
+                want = np.asarray(e4[2 * wk:2 * wk + 2]).mean(0)
+                np.testing.assert_array_equal(np.asarray(e2[wk]), want)
 
     params, ef, tail = run(cfg, sim, step_fn, params, ef, None,
                            CKPT_AT, STEPS)
@@ -199,7 +220,8 @@ def test_elastic_resume_1_to_4(fixed_rank_runs, tmp_path):
     got = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
     worst = worst_rel_diff(got, ref_params)
     assert worst < LINEARITY_TOL, (
-        f"elastic W=1→4 resume violates Lemma-3 linearity: {worst:.3e}")
+        f"elastic W={w}→{w_new} resume violates Lemma-3 linearity: "
+        f"{worst:.3e}")
     # and the losses agree to the same (loose) tolerance, step by step
     np.testing.assert_allclose(tail, ref_losses[CKPT_AT:], rtol=1e-4)
 

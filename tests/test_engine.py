@@ -17,7 +17,8 @@ import pytest
 
 from repro.core import engine, matrixize
 from repro.core.compressors import IdentityCompressor, PowerSGDCompressor
-from repro.core.dist import CollectiveStats, MeshCtx
+from repro.core.dist import CollectiveStats, MeshCtx, SimBackend
+from repro.core.simmesh import SimMesh
 
 KEY = jax.random.key(0)
 
@@ -221,3 +222,109 @@ def test_collective_budget_never_exceeded(name, comp, budget):
         assert stats.data_collectives <= budget, (
             name, n_layers, stats.data_collectives, stats.sizes)
         assert stats.gather_collectives == 0, name
+
+
+# ---------------------------------------------------------------------------
+# sync_mode="broadcast": semantics, byte accounting and collective budgets
+# ---------------------------------------------------------------------------
+
+def test_broadcast_mode_aggregates_bit_identical_across_ranks():
+    """Under sync_mode="broadcast" every data-axis aggregate must come back
+    bit-identical on all ranks, broadcast_flat must deliver rank 0's copy,
+    and CollectiveStats must record the reduce+broadcast legs honestly."""
+    W = 4
+    stats = CollectiveStats()
+
+    def one(x):
+        ctx = MeshCtx(data_axes=("dp",), sync_mode="broadcast", stats=stats)
+        (m,) = ctx.pmean_flat([x])
+        s = ctx.psum_data(x)
+        (b,) = ctx.broadcast_flat([x])
+        return m, s, b
+
+    x = np.asarray(jax.random.normal(KEY, (W, 13)))
+    m, s, b = (np.asarray(v) for v in
+               jax.vmap(one, axis_name="dp")(jnp.asarray(x)))
+    np.testing.assert_array_equal(m, np.broadcast_to(m[:1], m.shape))
+    np.testing.assert_array_equal(s, np.broadcast_to(s[:1], s.shape))
+    np.testing.assert_array_equal(b, np.broadcast_to(x[:1], b.shape))
+    np.testing.assert_allclose(m[0], x.mean(0), rtol=1e-6)
+    np.testing.assert_allclose(s[0], x.sum(0), rtol=1e-6)
+    assert stats.kinds == ["reduce", "broadcast",    # pmean_flat
+                           "reduce", "broadcast",    # psum_data
+                           "broadcast"]              # broadcast_flat
+    # broadcast bytes are flat in W — never fanout-scaled
+    assert stats.fanouts == [1] * 5
+    assert stats.bytes_per_collective() == [13 * 4] * 5
+
+
+def test_broadcast_mode_sync_false_skips_broadcast_record():
+    """sync=False marks an internal phase reduce: canonical order, but only
+    the reduce leg is recorded (the scheme broadcasts once at the end)."""
+    W = 2
+    stats = CollectiveStats()
+
+    def one(x):
+        ctx = MeshCtx(data_axes=("dp",), sync_mode="broadcast", stats=stats)
+        (m,) = ctx.pmean_flat([x], sync=False)
+        return m
+
+    m = np.asarray(jax.vmap(one, axis_name="dp")(jnp.ones((W, 7))))
+    np.testing.assert_array_equal(m, np.ones((W, 7)))
+    assert stats.kinds == ["reduce"]
+
+
+def test_broadcast_mode_weighted_matches_allreduce_semantics():
+    """The canonical deterministic reduction must preserve the weighted-pmean
+    contract (Σw·x/Σw, guarded denominator): same values as allreduce mode
+    up to reassociation, and the all-dropped round stays exactly zero."""
+    W = 4
+    x = jax.random.normal(KEY, (W, 5))
+
+    def run(mode, w):
+        def one(xi, wi):
+            ctx = MeshCtx(data_axes=("dp",), sync_mode=mode,
+                          backend=SimBackend(axis="dp", size=W, weight=wi))
+            return ctx.pmean_data(xi)
+        return np.asarray(jax.vmap(one, axis_name="dp")(x, w))
+
+    w = jnp.asarray([1.0, 0.0, 2.0, 1.0])
+    np.testing.assert_allclose(run("broadcast", w), run("allreduce", w),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(run("broadcast", jnp.zeros(W)),
+                                  np.zeros((W, 5)))
+
+
+@pytest.mark.parametrize("name,comp,reduces,broadcasts", [
+    ("powersgd", lambda: PowerSGDCompressor(rank=2), 2, 1),
+    ("identity", lambda: IdentityCompressor(), 1, 1),
+])
+def test_collective_budget_broadcast_mode(name, comp, reduces, broadcasts):
+    """ISSUE 6 satellite: under sync_mode="broadcast" the documented budgets
+    become `reduces` fused reduces plus at most ONE fused rank-0 broadcast
+    per step (powersgd ≤2+1, identity ≤1+1) — the per-phase reduces defer
+    their sync leg to the single end-of-step broadcast."""
+    W = 2
+    sim = SimMesh(workers=W, axis="dp")
+    for n_layers in (1, 6, 17):
+        grads, specs, shapes = _model_tree(n_layers)
+        c = comp()
+        stats = CollectiveStats()
+        state = c.init(shapes, specs, KEY)
+
+        def step(g, s):
+            ctx = sim.ctx(stats=stats, sync_mode="broadcast")
+            return c.step(g, s, specs, ctx=ctx, key=KEY).agg
+
+        agg = sim.run(step, in_axes=(0, 0))(
+            sim.replicate(grads), sim.replicate(state))
+        sim.assert_replicated(agg, f"{name} agg")
+        assert stats.reduce_collectives <= reduces, (
+            name, n_layers, stats.kinds, stats.sizes)
+        assert stats.broadcast_collectives <= broadcasts, (
+            name, n_layers, stats.kinds)
+        assert stats.gather_collectives == 0, name
+        for k, s_, i_, b_ in zip(stats.kinds, stats.sizes, stats.itemsizes,
+                                 stats.bytes_per_collective()):
+            if k == "broadcast":
+                assert b_ == s_ * i_  # flat in W

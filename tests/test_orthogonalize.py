@@ -7,9 +7,11 @@ try:
 except ImportError:  # minimal env: deterministic fallback sampler
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core.orthogonalize import cholesky_qr, gram_schmidt
+from repro.core.orthogonalize import cholesky_qr, gram_schmidt, gs_cholqr
 
 jax.config.update("jax_enable_x64", False)
+
+ULP = float(jnp.finfo(jnp.float32).eps)
 
 
 @settings(deadline=None, max_examples=25)
@@ -78,6 +80,132 @@ def test_tiny_values_stable():
     """Gradients can be ~1e-20 early in training; no NaNs allowed."""
     key = jax.random.key(3)
     p = jax.random.normal(key, (32, 2)) * 1e-20
-    for orth in (gram_schmidt, cholesky_qr):
+    for orth in (gram_schmidt, cholesky_qr, gs_cholqr):
         q = orth(p)
         assert bool(jnp.all(jnp.isfinite(q)))
+
+
+# ---------------------------------------------------------------------------
+# determinism / stability properties of the hardened Gram-Schmidt (ISSUE 6):
+# orthonormality at dtype-ULP tolerance, idempotence, bounded response to
+# ULP-perturbed inputs, exact zeros (never NaN) on rank-deficient input,
+# and exact scale invariance.
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(8, 96),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_schmidt_orthonormal_ulp_tolerance(n, r, seed):
+    """Well-conditioned gaussian input: ‖QᵀQ − I‖_max within a dtype-ULP
+    budget, far tighter than the legacy 2e-3 check above."""
+    r = min(r, n)
+    p = jax.random.normal(jax.random.key(seed), (n, r))
+    q = gram_schmidt(p)
+    gram = np.asarray(q.T @ q)
+    assert np.abs(gram - np.eye(r)).max() <= 64 * r * ULP
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(8, 96),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_schmidt_idempotent(n, r, seed):
+    """orth(orth(P)) ≈ orth(P): an already-orthonormal basis passes through
+    with at most ULP-level renormalization touch-up per column."""
+    r = min(r, n)
+    p = jax.random.normal(jax.random.key(seed), (n, r))
+    q1 = gram_schmidt(p)
+    q2 = gram_schmidt(q1)
+    assert np.abs(np.asarray(q2 - q1)).max() <= 64 * r * ULP
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(8, 96),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_schmidt_ulp_perturbation_not_amplified(n, r, seed):
+    """The drift bug (docs/checkpoint.md): rank-dependent all-reduce seeds
+    ULP-level input differences which the legacy orthogonalizer amplified to
+    5e-1 factor divergence.  On well-conditioned input, a 1-ULP relative
+    perturbation must stay O(√ULP) in the output, not O(1)."""
+    r = min(r, n)
+    p = jax.random.normal(jax.random.key(seed), (n, r))
+    bump = 1.0 + jnp.where(
+        jax.random.bernoulli(jax.random.key(seed + 1), 0.5, p.shape),
+        ULP, 0.0)
+    q1 = gram_schmidt(p)
+    q2 = gram_schmidt(p * bump)
+    assert np.abs(np.asarray(q2 - q1)).max() <= 1e-3
+
+
+def test_gram_schmidt_scale_invariant_bitexact():
+    """Power-of-two rescaling (including deep-underflow scales the old
+    absolute-epsilon guard mangled) leaves the output bit-identical."""
+    p = jax.random.normal(jax.random.key(7), (48, 4))
+    q = np.asarray(gram_schmidt(p))
+    for c in (2.0**-40, 2.0**-10, 2.0**20):
+        np.testing.assert_array_equal(np.asarray(gram_schmidt(p * c)), q)
+
+
+def test_gram_schmidt_zero_columns_exact_zero():
+    """All-zero columns come back as exact zeros — not NaN, not noise."""
+    p = jax.random.normal(jax.random.key(8), (32, 4))
+    p = p.at[:, 1].set(0.0).at[:, 3].set(0.0)
+    q = np.asarray(gram_schmidt(p))
+    assert np.isfinite(q).all()
+    np.testing.assert_array_equal(q[:, 1], np.zeros(32))
+    np.testing.assert_array_equal(q[:, 3], np.zeros(32))
+    # the surviving columns are still orthonormal
+    live = q[:, [0, 2]]
+    np.testing.assert_allclose(live.T @ live, np.eye(2), atol=64 * ULP)
+
+
+def test_gram_schmidt_rank_deficient_no_nan():
+    """Numerically dependent columns (the warm-started converged case) are
+    zeroed, never normalized noise: output is finite and QᵀQ is a projector."""
+    key = jax.random.key(9)
+    base = jax.random.normal(key, (64, 2))
+    coeff = jax.random.normal(jax.random.key(10), (2, 6))
+    p = base @ coeff                     # rank 2 embedded in 6 columns
+    q = gram_schmidt(p)
+    assert bool(jnp.all(jnp.isfinite(q)))
+    gram = np.asarray(q.T @ q)
+    np.testing.assert_allclose(gram @ gram, gram, atol=1e-4)
+    # exactly rank-2 output: 2 unit columns, 4 exact-zero columns
+    norms = np.sort(np.diag(gram))
+    np.testing.assert_allclose(norms[:4], np.zeros(4), atol=0)
+    np.testing.assert_allclose(norms[4:], np.ones(2), atol=64 * ULP)
+
+
+def test_gs_cholqr_matches_gs_when_well_conditioned():
+    """The fallback orthogonalizer passes Gram-Schmidt output through
+    bit-exactly whenever GS already met its ULP budget."""
+    p = jax.random.normal(jax.random.key(11), (64, 4))
+    np.testing.assert_array_equal(np.asarray(gs_cholqr(p)),
+                                  np.asarray(gram_schmidt(p)))
+
+
+def test_gs_cholqr_selects_cholqr_on_ill_conditioned():
+    """When GS exceeds its ULP orthogonality budget (κ ~ 1e4: sequential
+    MGS loses orthogonality as κ·ulp) the fallback must actually switch to
+    the CholeskyQR2 result — bit-equal to calling cholesky_qr directly —
+    and stay finite."""
+    key = jax.random.key(12)
+    u = jax.random.normal(key, (64, 4))
+    p = u @ jnp.diag(jnp.array([1.0, 1.0, 1.0, 1e-4]))
+    p = p.at[:, 3].add(p[:, 0])          # col3 ≈ col0 + 1e-4·noise
+    q_gs = gram_schmidt(p)
+    gram = np.asarray(q_gs.T @ q_gs)
+    err = np.abs(gram @ gram - gram).max()
+    assert err > 1024 * ULP, "fixture no longer ill-conditioned enough"
+    q = gs_cholqr(p)
+    assert bool(jnp.all(jnp.isfinite(q)))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(cholesky_qr(p)))

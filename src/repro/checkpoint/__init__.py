@@ -1,6 +1,8 @@
 from repro.checkpoint.msgpack_ckpt import (
-    CheckpointError, all_steps, checkpoint_meta, latest_step, load_envelope,
-    restore_checkpoint, save_checkpoint)
+    MODEL_AXIS_KEY, CheckpointError, all_steps, check_model_axis,
+    checkpoint_meta, latest_step, load_envelope, restore_checkpoint,
+    save_checkpoint)
 from repro.checkpoint.train_state import (
-    TrainState, canonicalize_sim, replicate_sim, restore_train_state,
-    save_train_state)
+    TrainState, canonicalize_mesh, canonicalize_sim, replicate_mesh,
+    replicate_sim, restore_train_state, save_train_state,
+    stack_model_template)

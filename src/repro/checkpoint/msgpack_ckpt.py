@@ -44,6 +44,16 @@ import numpy as np
 
 FORMAT_VERSION = 2
 
+# meta key recording the model-parallel degree the envelope was saved at
+# (alongside "mesh_shape", the full axis-name → size dict).  Model-LOCAL
+# state leaves (per-model-rank Q factors; see repro.core.engine.
+# StatePartition) are stored stacked along a leading (model_axis_size,)
+# dim, so an envelope only re-slices correctly onto a mesh with the same
+# model degree — check_model_axis() enforces that.  Envelopes without the
+# key predate the stacked layout (or were saved by a single-axis driver)
+# and are treated as model_axis_size=1.
+MODEL_AXIS_KEY = "model_axis_size"
+
 _CKPT_RE = re.compile(r"ckpt_(\d+)\.msgpack")
 
 
@@ -198,6 +208,23 @@ def load_envelope(directory: str, step: Optional[int] = None) -> dict:
 def checkpoint_meta(directory: str, step: Optional[int] = None) -> dict:
     """The ``meta`` dict saved alongside a checkpoint (``{}`` for v1)."""
     return load_envelope(directory, step)["meta"]
+
+
+def check_model_axis(meta: dict, model_axis_size: int):
+    """Refuse to restore an envelope into a different model-parallel degree.
+
+    Model-local leaves are stored stacked per model rank; re-slicing a
+    degree-S stack onto a degree-S' mesh would hand every rank the wrong
+    (or rank-0's) factors — shape-coincident leaves would even load without
+    an error.  Raises :class:`CheckpointError` naming both sizes."""
+    saved = int(meta.get(MODEL_AXIS_KEY, 1) or 1)
+    if saved != int(model_axis_size):
+        raise CheckpointError(
+            f"model-parallel degree mismatch: checkpoint was saved at "
+            f"{MODEL_AXIS_KEY}={saved}, this run restores at "
+            f"{MODEL_AXIS_KEY}={int(model_axis_size)} — model-local state "
+            f"(per-rank warm-start factors) cannot be re-sliced across "
+            f"model degrees; restore on a mesh with {saved} model shard(s)")
 
 
 def restore_tree(payload: dict, template: Any, shape_ok=None) -> Any:

@@ -49,10 +49,13 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint.msgpack_ckpt import (
-    CheckpointError, load_envelope, restore_tree, save_checkpoint)
+    MODEL_AXIS_KEY, CheckpointError, check_model_axis, load_envelope,
+    restore_tree, save_checkpoint)
 from repro.core import error_feedback
+from repro.core.engine import MODEL_LOCAL, StatePartition
 from repro.core.error_feedback import EFState
 
 TRAIN_STATE_VERSION = 1
@@ -118,15 +121,21 @@ def _error_workers(ef: EFState) -> Optional[int]:
 
 def save_train_state(directory: str, state: TrainState, *,
                      controller=None, keep: int = 3,
-                     extra_meta: Optional[dict] = None) -> str:
+                     extra_meta: Optional[dict] = None,
+                     model_axis_size: int = 1,
+                     mesh_shape: Optional[dict] = None) -> str:
     """Write one full-state checkpoint at ``state.ef.step``.
 
     ``state`` must be in the canonical worker layout (see module
-    docstring; SimMesh runs go through :func:`canonicalize_sim` first).
+    docstring; SimMesh runs go through :func:`canonicalize_sim` first,
+    model-parallel shard_map runs through :func:`canonicalize_mesh`).
     ``controller`` — the run's
     :class:`~repro.core.powersgd.RankController`, serialized into ``meta``
     so a resume continues the schedule (and its transition PRNG stream)
-    from the exact position.
+    from the exact position.  ``model_axis_size`` / ``mesh_shape`` record
+    the model-parallel degree the state was gathered at — the restore-side
+    degree guard (:func:`repro.checkpoint.msgpack_ckpt.check_model_axis`)
+    reads the former.
     """
     key_data, key_tag = key_to_data(state.key)
     meta = {
@@ -134,6 +143,8 @@ def save_train_state(directory: str, state: TrainState, *,
         "workers": _error_workers(state.ef),
         "key_dtype": key_tag,
         "controller": None if controller is None else controller.state_dict(),
+        MODEL_AXIS_KEY: int(model_axis_size),
+        "mesh_shape": mesh_shape,
     }
     meta.update(extra_meta or {})
     return save_checkpoint(directory, int(state.ef.step),
@@ -141,7 +152,8 @@ def save_train_state(directory: str, state: TrainState, *,
 
 
 def restore_train_state(directory: str, template: TrainState,
-                        step: Optional[int] = None
+                        step: Optional[int] = None, *,
+                        model_axis_size: Optional[int] = None
                         ) -> Tuple[TrainState, dict]:
     """Restore a :class:`TrainState`, adapting rank and worker count.
 
@@ -150,16 +162,23 @@ def restore_train_state(directory: str, template: TrainState,
     count).  Returns ``(state, meta)``; ``state`` carries the checkpoint's
     factor ranks (possibly ≠ template's — the jitted step retraces) and
     the template's worker count (error buffers rescaled when it differs
-    from ``meta["workers"]``).  Raises :class:`CheckpointError` on
-    truncation/corruption or any other structure/shape/dtype mismatch.
+    from ``meta["workers"]``; ``meta["ef_rescale"]`` records which
+    :func:`~repro.core.error_feedback.rescale_path` ran).  Pass
+    ``model_axis_size`` (the restoring mesh's model degree) to enforce the
+    model-parallel degree guard — model-local leaves are stored stacked
+    per model rank and cannot be re-sliced across degrees.  Raises
+    :class:`CheckpointError` on truncation/corruption, degree mismatch, or
+    any other structure/shape/dtype mismatch.
     """
     payload = load_envelope(directory, step)
-    meta = payload["meta"]
+    meta = dict(payload["meta"])
     if "train_state_version" not in meta:
         raise CheckpointError(
             f"checkpoint in {directory} is not a TrainState envelope "
             f"(plain save_checkpoint tree?) — no train_state_version in "
             f"meta")
+    if model_axis_size is not None:
+        check_model_axis(meta, model_axis_size)
 
     def shape_ok(tpath, gs, ws):
         if tpath.startswith(_COMP_PREFIX):
@@ -173,15 +192,141 @@ def restore_train_state(directory: str, template: TrainState,
                         shape_ok=shape_ok)
     ef: EFState = tree["ef"]
     w_new = _error_workers(template.ef)
-    if w_new is not None and _error_workers(ef) != w_new:
-        ef = EFState(
-            error=error_feedback.rescale_error_buffers(ef.error, w_new),
-            momentum=ef.momentum, comp=ef.comp, step=ef.step)
+    w_old = _error_workers(ef)
+    if w_new is not None:
+        meta["ef_rescale"] = {
+            "from": w_old, "to": w_new,
+            "path": error_feedback.rescale_path(w_old, w_new)}
+        if w_old != w_new:
+            ef = EFState(
+                error=error_feedback.rescale_error_buffers(ef.error, w_new),
+                momentum=ef.momentum, comp=ef.comp, step=ef.step)
     state = TrainState(
         params=tree["params"], ef=ef,
         key=key_from_data(tree["key_data"], meta.get("key_dtype", "raw")),
         data_step=tree["data_step"])
     return state, meta
+
+
+# ---------------------------------------------------------------------------
+# model-parallel mesh ⇄ canonical layout
+# ---------------------------------------------------------------------------
+
+def _is_local(part) -> bool:
+    return isinstance(part, StatePartition) and part.model == MODEL_LOCAL
+
+
+def _local_map(fn, tree, partition):
+    """Map ``fn(leaf, part)`` over ``tree`` zipped with its partition tree
+    (whose leaves are StatePartition records or None for uncompressed
+    positions)."""
+    return jax.tree_util.tree_map(
+        fn, tree, partition,
+        is_leaf=lambda x: x is None or isinstance(x, StatePartition))
+
+
+def _shard_model_coord(shard, mesh, model_axis: str):
+    """(model coordinate, is-data-rank-zero) of one addressable shard,
+    read off the shard's device position in the mesh array."""
+    pos = np.argwhere(mesh.devices == shard.device)
+    assert pos.shape[0] == 1, (shard.device, mesh.devices)
+    coords = dict(zip(mesh.axis_names, pos[0]))
+    mcoord = int(coords.pop(model_axis, 0))
+    return mcoord, all(int(c) == 0 for c in coords.values())
+
+
+def canonicalize_mesh(mesh, params, ef: EFState, partition: EFState,
+                      model_axis: str = "model") -> Tuple[Any, EFState]:
+    """Gather model-LOCAL compressor leaves into the stacked canonical
+    layout before :func:`save_train_state`.
+
+    Model-local leaves (row-parallel weights' Q factors — see
+    :func:`repro.core.powersgd.factor_partition`) carry *distinct
+    per-model-rank content behind a replicated-shaped spec*; a plain
+    ``np.asarray`` would silently serialize device 0's (model rank 0's)
+    replica and a restore would hand every rank that copy.  Here each model
+    rank's copy is read host-side from the array's addressable shards (the
+    data-rank-0 replica per model coordinate — no collectives, so compile-
+    time collective budgets are untouched) and stacked along a leading
+    ``(model_axis_size,)`` dim.  Degree-1 meshes pass through unchanged, so
+    single-axis and SimMesh envelopes keep their pre-existing layout.
+    """
+    size = int(mesh.shape.get(model_axis, 1))
+    if size <= 1:
+        return params, ef
+
+    def gather(x, part):
+        if not _is_local(part):
+            return x
+        per = {}
+        for shard in x.addressable_shards:
+            mcoord, data_zero = _shard_model_coord(shard, mesh, model_axis)
+            if data_zero:
+                per[mcoord] = np.asarray(shard.data)
+        assert sorted(per) == list(range(size)), sorted(per)
+        return np.stack([per[c] for c in range(size)])
+
+    return params, EFState(
+        error=ef.error, momentum=ef.momentum,
+        comp=_local_map(gather, ef.comp, partition.comp), step=ef.step)
+
+
+def replicate_mesh(mesh, params, ef: EFState, partition: EFState,
+                   model_axis: str = "model") -> Tuple[Any, EFState]:
+    """Inverse of :func:`canonicalize_mesh`: re-slice stacked model-LOCAL
+    leaves onto ``mesh`` so every model rank gets *its own* pre-save copy
+    back.
+
+    Each device receives the slice for its model coordinate via
+    ``jax.make_array_from_single_device_arrays`` under the leaf's declared
+    (replicated-shaped) sharding — exactly the layout the live train step
+    produces, so the jitted step consumes it without a resharding copy.
+    The stack's leading dim must equal the mesh's model degree
+    (:func:`restore_train_state`'s ``model_axis_size`` guard enforces this
+    before the slicing is ever reached)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    size = int(mesh.shape.get(model_axis, 1))
+    if size <= 1:
+        return params, ef
+
+    def scatter(x, part):
+        if not _is_local(part):
+            return x
+        x = np.asarray(x)
+        assert x.shape[0] == size, (x.shape, size)
+        sharding = NamedSharding(mesh, part.spec or PartitionSpec())
+        arrays = []
+        for d in mesh.devices.flat:
+            pos = np.argwhere(mesh.devices == d)[0]
+            mcoord = int(pos[mesh.axis_names.index(model_axis)])
+            arrays.append(jax.device_put(x[mcoord], d))
+        return jax.make_array_from_single_device_arrays(
+            x.shape[1:], sharding, arrays)
+
+    return params, EFState(
+        error=ef.error, momentum=ef.momentum,
+        comp=_local_map(scatter, ef.comp, partition.comp), step=ef.step)
+
+
+def stack_model_template(ef: EFState, partition: EFState,
+                         model_axis_size: int) -> EFState:
+    """Restore template in the stacked canonical layout: model-LOCAL comp
+    leaves gain the leading ``(model_axis_size,)`` dim the envelope stores
+    them with.  Degree 1 is the identity (matching degree-1 and legacy
+    envelopes)."""
+    size = int(model_axis_size)
+    if size <= 1:
+        return ef
+
+    def stack(x, part):
+        if not _is_local(part):
+            return x
+        return jax.ShapeDtypeStruct((size,) + tuple(x.shape), x.dtype)
+
+    return EFState(error=ef.error, momentum=ef.momentum,
+                   comp=_local_map(stack, ef.comp, partition.comp),
+                   step=ef.step)
 
 
 # ---------------------------------------------------------------------------

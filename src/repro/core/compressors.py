@@ -101,6 +101,15 @@ class Compressor:
     def init(self, shapes, specs, key):
         return None
 
+    def state_partition(self, param_pspecs, mspecs):
+        """Per-leaf :class:`~repro.core.engine.StatePartition` tree for this
+        compressor's state (shaped like :meth:`init`'s return), derived from
+        the owning parameters' PartitionSpecs.  The launch layer calls this
+        at step-build time and the checkpoint layer uses the result to
+        gather/re-slice model-local leaves (``docs/checkpoint.md``).
+        Stateless compressors have no state to partition: ``None``."""
+        return None
+
     def step(self, deltas, state, specs, ctx: MeshCtx = SINGLE, key=None) -> CompressOut:
         if self.transport == "fused":
             return engine.run_step(self, deltas, state, specs, ctx, key,
@@ -261,8 +270,27 @@ class PowerSGDCompressor(Compressor):
     def init(self, shapes, specs, key):
         return powersgd.init_state(self.cfg, shapes, specs, key)
 
+    def state_partition(self, param_pspecs, mspecs):
+        """Per-leaf partition of the warm-start Q factors.  A Q factor is
+        model-LOCAL when the owning weight's matrixized n dim is
+        model-sharded (row-parallel): each model rank's ``Q = Mᵀ P̂`` is a
+        function of its local n-rows, so the replicated-shaped leaf holds
+        per-rank content — see :func:`repro.core.powersgd.factor_partition`.
+        """
+        return powersgd.state_partition(param_pspecs, mspecs)
+
+    def bind_state_partition(self, partition):
+        """Attach a :meth:`state_partition` tree so every subsequent
+        :meth:`step` hands it to the bucketed engine
+        (:class:`~repro.core.engine.MatrixPayloads` then marks which bucket
+        slabs hold model-sharded/-local factors).  Returns ``partition``."""
+        self._state_partition = partition
+        return partition
+
     def step(self, deltas, state, specs, ctx=SINGLE, key=None):
-        return powersgd.compress_aggregate(self.cfg, deltas, state, specs, ctx, key)
+        return powersgd.compress_aggregate(
+            self.cfg, deltas, state, specs, ctx, key,
+            partition=getattr(self, "_state_partition", None))
 
 
 class UnbiasedRankK(Compressor):

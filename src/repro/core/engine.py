@@ -329,6 +329,54 @@ def run_step(comp, deltas, state, specs, ctx: MeshCtx = SINGLE,
 
 
 # ---------------------------------------------------------------------------
+# Per-leaf state partitioning: how compressor state relates to the model axis
+# ---------------------------------------------------------------------------
+
+# A state leaf's content can relate to the mesh's model axis in three ways.
+# The distinction matters because only the first two are visible in the
+# leaf's dims-PartitionSpec — the third is exactly the class of leaves a
+# naive `np.asarray` checkpoint silently corrupts (it reads device 0's
+# replica, i.e. model rank 0's copy).
+MODEL_REPLICATED = "replicated"  # same bits on every model rank
+MODEL_SHARDED = "sharded"        # a dim carries the model axis (honest spec)
+MODEL_LOCAL = "local"            # per-model-rank content with NO dim carrying
+#                                  the axis (e.g. the Q factor of a
+#                                  row-parallel weight: Q = Mᵀ P̂ is computed
+#                                  from the rank's local n-rows of M, but its
+#                                  (m, r) dims are replicated-shaped)
+
+
+@dataclasses.dataclass(frozen=True)
+class StatePartition:
+    """Partition record for one compressor-state leaf.
+
+    ``spec`` is the dims PartitionSpec the engine declares for the leaf
+    (what ``shard_map`` in/out specs use); ``model`` is one of
+    :data:`MODEL_REPLICATED` / :data:`MODEL_SHARDED` / :data:`MODEL_LOCAL`
+    and tells the checkpoint layer whether the leaf needs a per-model-rank
+    gather at save and a re-slice at restore (``checkpoint/train_state.py::
+    canonicalize_mesh`` / ``replicate_mesh``).  Unregistered dataclass —
+    trees of these are trees of leaves.
+    """
+
+    spec: Any    # jax.sharding.PartitionSpec (dims only)
+    model: str   # MODEL_REPLICATED | MODEL_SHARDED | MODEL_LOCAL
+
+
+def partition_leaves(partition, leaves) -> list:
+    """Per-leaf model relation aligned with :func:`collect_leaves` output.
+
+    ``partition`` is a tree of :class:`StatePartition`/None shaped like the
+    compressor state; returns one relation string (or None) per leaf, in the
+    same deterministic order ``collect_leaves`` produces."""
+    flat = jax.tree_util.tree_flatten(
+        partition, is_leaf=lambda x: x is None)[0]
+    rels = [None if p is None else p.model for p in flat]
+    assert len(rels) == len(leaves), (len(rels), len(leaves))
+    return rels
+
+
+# ---------------------------------------------------------------------------
 # MatrixPayloads: the bucketed pack/scatter plan for matrix-shaped schemes
 # ---------------------------------------------------------------------------
 
@@ -370,15 +418,26 @@ class MatrixPayloads:
     unc_ids: List[int]               # leaves that travel uncompressed
     bucket_ranks: List[int]          # per bucket: its leaves' shared rank
     bits: int                        # analytic payload bits per worker
+    bucket_model_sharded: List[bool] = None  # per bucket: any leaf whose
+    #   matrixized M (hence its state) is model-sharded or model-local —
+    #   i.e. the bucket's factors are NOT whole-mesh replicated and its
+    #   state needs mesh-aware checkpointing.  None when no partition tree
+    #   was supplied (single-axis runs; the information is then unknown).
 
     @classmethod
     def build(cls, deltas, state, specs, *, dtype,
               tolerance: float = 0.25,
-              resample_key: Optional[jax.Array] = None) -> "MatrixPayloads":
+              resample_key: Optional[jax.Array] = None,
+              partition=None) -> "MatrixPayloads":
         """``resample_key`` replaces every warm-start factor with a fresh
         i.i.d. normal draw (cold start, at the factor's own rank), derived
-        per leaf via :func:`leaf_key`."""
+        per leaf via :func:`leaf_key`.  ``partition`` is an optional tree of
+        :class:`StatePartition` aligned with ``state`` — when given, each
+        bucket learns whether it holds model-sharded/-local leaves
+        (``bucket_model_sharded``)."""
         leaves = collect_leaves(deltas, state, specs)
+        relations = (None if partition is None
+                     else partition_leaves(partition, leaves))
         mats, qs, plan_shapes, lshapes, unc_ids = [], [], [], [], []
         ranks = {}
         floats = 0
@@ -416,12 +475,16 @@ class MatrixPayloads:
                     f"(bucket ({b.n}, {b.m}) has ranks {sorted(rs)}); "
                     "assign ranks per bucket — see repro.core.autotune")
             bucket_ranks.append(rs.pop())
+        bucket_ms = None
+        if relations is not None:
+            bucket_ms = [any(relations[e.index] not in (None, MODEL_REPLICATED)
+                             for e in b.entries) for b in plan.buckets]
         return cls(
             deltas=deltas, specs=specs, leaves=leaves, plan=plan,
             m_bufs=[matrixize.pack_matrices(b, mats) for b in plan.buckets],
             q_bufs=[matrixize.pack_factors(b, qs) for b in plan.buckets],
             lshapes=lshapes, unc_ids=unc_ids, bucket_ranks=bucket_ranks,
-            bits=floats * 32)
+            bits=floats * 32, bucket_model_sharded=bucket_ms)
 
     @property
     def unc_values(self) -> List[jax.Array]:

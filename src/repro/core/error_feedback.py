@@ -36,6 +36,7 @@ Weight decay follows the paper's recipe (§5): coupled, added to the gradient
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -83,6 +84,21 @@ def init_state(compressor: Compressor, params, specs, key: jax.Array) -> EFState
     )
 
 
+def rescale_path(w_old: int, w_new: int) -> str:
+    """Which :func:`rescale_error_buffers` branch a ``w_old → w_new``
+    rescale takes: ``"identity"`` / ``"grow"`` / ``"shrink"`` /
+    ``"coprime-mean"``.  Pure — the checkpoint layer records it into the
+    restore ``meta`` (``meta["ef_rescale"]``) so post-resume trajectory
+    deltas are attributable to the rescale semantics actually applied."""
+    if w_new == w_old:
+        return "identity"
+    if w_new % w_old == 0:
+        return "grow"
+    if w_old % w_new == 0:
+        return "shrink"
+    return "coprime-mean"
+
+
 def rescale_error_buffers(error, workers: int):
     """Re-shard a stacked per-worker error-buffer tree to a new worker count.
 
@@ -116,13 +132,19 @@ def rescale_error_buffers(error, workers: int):
     w_old = leaves[0].shape[0]
     for l in leaves:
         assert l.shape[0] == w_old, (l.shape, w_old)
-    if workers == w_old:
+    path = rescale_path(w_old, workers)
+    if path == "identity":
         return error
+    if path == "coprime-mean":
+        warnings.warn(
+            f"coprime EF rescale {w_old} -> {workers}: every new buffer is "
+            f"the global worker-mean (per-worker identity lost; mean "
+            f"preserved)", stacklevel=2)
 
     def leaf(e):
-        if workers % w_old == 0:
+        if path == "grow":
             return jnp.repeat(e, workers // w_old, axis=0)
-        if w_old % workers == 0:
+        if path == "shrink":
             k = w_old // workers
             return jnp.mean(e.reshape((workers, k) + e.shape[1:]), axis=1)
         mean = jnp.mean(e, axis=0, keepdims=True)

@@ -98,6 +98,63 @@ from repro.core.orthogonalize import get_orthogonalizer
 # importers (compressors, tests)
 PowerSGDOut = engine.CompressOut
 _leaf_key = engine.leaf_key
+StatePartition = engine.StatePartition
+MODEL_REPLICATED = engine.MODEL_REPLICATED
+MODEL_SHARDED = engine.MODEL_SHARDED
+MODEL_LOCAL = engine.MODEL_LOCAL
+
+
+def _mentions(entry, axis: str) -> bool:
+    """Does one PartitionSpec entry carry ``axis`` (entries may be tuples)?"""
+    if entry == axis:
+        return True
+    return isinstance(entry, (tuple, list)) and axis in entry
+
+
+def factor_partition(param_spec, mspec, model_axis: str = "model"):
+    """:class:`~repro.core.engine.StatePartition` of one Q factor.
+
+    Q has shape ``batch_shape + (m, r)``: batch dims keep the parameter's
+    entries, the m dim carries the model axis iff any of the parameter's
+    trailing (m) dims does.  The subtle case is the *n* dim: ``Q = Mᵀ P̂``
+    is computed from each model rank's local n-rows of M, so when the n dim
+    is model-sharded (row-parallel weights — embeddings, attention out
+    projections, MLP down projections) each rank's Q holds *different*
+    content even though no Q dim carries the axis — that leaf is
+    :data:`~repro.core.engine.MODEL_LOCAL`, and a checkpoint must gather it
+    per model rank instead of trusting the replicated-shaped spec (the
+    rank-0-copy corruption this classification exists to prevent).
+    Returns None for uncompressed leaves.
+    """
+    if not mspec.is_compressed():
+        return None
+    from jax.sharding import PartitionSpec as P
+
+    b = mspec.batch_dims
+    entries = tuple(param_spec) + (None,) * 16  # pad
+    n_sharded = _mentions(entries[b], model_axis)
+    m_sharded = any(_mentions(e, model_axis) for e in entries[b + 1:b + 16])
+    assert not (n_sharded and m_sharded), (
+        "a weight matrixized with both n and m dims model-sharded has no "
+        f"single-axis TP layout: {param_spec} with {mspec}")
+    spec = P(*(entries[:b] + (model_axis if m_sharded else None, None)))
+    if n_sharded:
+        model = MODEL_LOCAL
+    elif m_sharded or any(_mentions(e, model_axis) for e in entries[:b]):
+        model = MODEL_SHARDED
+    else:
+        model = MODEL_REPLICATED
+    return StatePartition(spec=spec, model=model)
+
+
+def state_partition(param_pspecs, mspecs, model_axis: str = "model"):
+    """Tree of :func:`factor_partition` records, shaped like the state tree
+    :func:`init_state` builds (None leaves at uncompressed positions)."""
+    from jax.sharding import PartitionSpec as P
+
+    return jax.tree_util.tree_map(
+        lambda s, ms: factor_partition(s, ms, model_axis),
+        param_pspecs, mspecs, is_leaf=lambda x: isinstance(x, P))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -465,9 +522,14 @@ def compress_aggregate(
     specs,
     ctx: MeshCtx = SINGLE,
     key: Optional[jax.Array] = None,
+    partition=None,              # optional StatePartition tree (see
+    #                              state_partition): lets the engine mark
+    #                              which buckets hold model-sharded/-local
+    #                              factors
 ) -> PowerSGDOut:
     if cfg.bucketing in ("auto", "on"):
-        return _compress_aggregate_bucketed(cfg, deltas, state, specs, ctx, key)
+        return _compress_aggregate_bucketed(cfg, deltas, state, specs, ctx,
+                                            key, partition=partition)
     if cfg.bucketing != "off":
         raise ValueError(
             f"unknown bucketing mode {cfg.bucketing!r}; use 'auto', 'on' or 'off'")
@@ -538,6 +600,7 @@ def _compress_aggregate_bucketed(
     specs,
     ctx: MeshCtx = SINGLE,
     key: Optional[jax.Array] = None,
+    partition=None,
 ) -> PowerSGDOut:
     """Batched power iteration over shape buckets, 2 collectives per iter.
 
@@ -560,7 +623,8 @@ def _compress_aggregate_bucketed(
     payloads = engine.MatrixPayloads.build(
         deltas, state, specs, dtype=cfg.dtype,
         tolerance=cfg.bucket_pad_tolerance,
-        resample_key=None if cfg.warm_start else key)
+        resample_key=None if cfg.warm_start else key,
+        partition=partition)
     transport = engine.Transport(ctx=ctx, wire_dtype=cfg.wire_dtype,
                                  max_chunk_bytes=cfg.max_chunk_bytes)
     m_bufs, q_bufs = payloads.m_bufs, payloads.q_bufs

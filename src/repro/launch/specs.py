@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import matrixize
+from repro.core import matrixize, powersgd
+from repro.core.engine import (MODEL_REPLICATED, MODEL_SHARDED,
+                               StatePartition)
 from repro.core.error_feedback import EFState
 from repro.configs.base import InputShape, ModelConfig
 from repro.models import attention, model
@@ -25,14 +27,12 @@ def qstate_pspec(param_spec: P, mspec: matrixize.MatrixSpec) -> Optional[P]:
     """PartitionSpec of the PowerSGD Q factor for one parameter.
 
     Q has shape batch_shape + (m, r): batch dims keep their entries; the m
-    dim is model-sharded iff any of the parameter's trailing (m) dims is."""
-    if not mspec.is_compressed():
-        return None
-    b = mspec.batch_dims
-    entries = tuple(param_spec) + (None,) * 16  # pad
-    m_entries = entries[b + 1:b + 16]
-    m_spec = "model" if any(e == "model" for e in m_entries) else None
-    return P(*(entries[:b] + (m_spec, None)))
+    dim is model-sharded iff any of the parameter's trailing (m) dims is.
+    The canonical derivation (including the model-LOCAL classification of
+    row-parallel weights' factors, which this dims-only view cannot
+    express) lives in :func:`repro.core.powersgd.factor_partition`."""
+    part = powersgd.factor_partition(param_spec, mspec)
+    return None if part is None else part.spec
 
 
 def qstate_pspecs(param_pspecs, mspecs):
@@ -41,21 +41,62 @@ def qstate_pspecs(param_pspecs, mspecs):
         is_leaf=lambda x: isinstance(x, P))
 
 
+def _dims_partition(spec: P, model_axis: str = "model") -> StatePartition:
+    """Partition record for a leaf whose spec is *honest* — its content is
+    fully described by its dims (params, momentum, error buffers): the leaf
+    is model-sharded iff some dim carries the axis, never model-local."""
+    sharded = any(powersgd._mentions(e, model_axis) for e in tuple(spec))
+    return StatePartition(
+        spec=spec, model=MODEL_SHARDED if sharded else MODEL_REPLICATED)
+
+
+def ef_partition(param_pspecs, mspecs, dp_axes: Tuple[str, ...],
+                 compressor=None, stateful: bool = True) -> EFState:
+    """Per-leaf :class:`~repro.core.engine.StatePartition` tree for the
+    whole EF-SGD state — the single source of truth the shard_map specs
+    (:func:`ef_pspecs`) and the mesh-aware checkpoint path
+    (``checkpoint/train_state.py::canonicalize_mesh``/``replicate_mesh``)
+    both derive from.
+
+    Error buffers gain the leading data-axes dim and inherit the owning
+    parameter's model sharding; momentum mirrors the parameter exactly;
+    ``comp`` is the compressor's own :meth:`~repro.core.compressors.
+    Compressor.state_partition` (PowerSGD classifies row-parallel weights'
+    Q factors as model-LOCAL — per-model-rank content behind a
+    replicated-shaped spec)."""
+    is_p = lambda x: isinstance(x, P)
+    error = jax.tree_util.tree_map(
+        lambda s: _dims_partition(P(*((dp_axes,) + tuple(s)))),
+        param_pspecs, is_leaf=is_p)
+    momentum = jax.tree_util.tree_map(_dims_partition, param_pspecs,
+                                      is_leaf=is_p)
+    if compressor is not None:
+        comp = compressor.state_partition(param_pspecs, mspecs)
+    elif stateful:
+        comp = powersgd.state_partition(param_pspecs, mspecs)
+    else:
+        comp = None
+    return EFState(error=error, momentum=momentum, comp=comp,
+                   step=StatePartition(spec=P(), model=MODEL_REPLICATED))
+
+
+def partition_specs(partition):
+    """Extract the dims-PartitionSpec tree from a partition tree (what
+    ``shard_map`` in/out specs consume)."""
+    return jax.tree_util.tree_map(
+        lambda p: None if p is None else p.spec, partition,
+        is_leaf=lambda x: x is None or isinstance(x, StatePartition))
+
+
 def ef_pspecs(param_pspecs, mspecs, dp_axes: Tuple[str, ...],
               stateful: bool = True) -> EFState:
-    """PartitionSpecs for the EF-SGD state tree.
+    """PartitionSpecs for the EF-SGD state tree (dims view of
+    :func:`ef_partition`).
 
     ``stateful=False`` — the compressor carries no per-matrix state
     (identity, sparsifiers): ``comp`` is the empty pytree ``None``."""
-    error = jax.tree_util.tree_map(
-        lambda s: P(*((dp_axes,) + tuple(s))), param_pspecs,
-        is_leaf=lambda x: isinstance(x, P))
-    return EFState(
-        error=error,
-        momentum=param_pspecs,
-        comp=qstate_pspecs(param_pspecs, mspecs) if stateful else None,
-        step=P(),
-    )
+    return partition_specs(
+        ef_partition(param_pspecs, mspecs, dp_axes, stateful=stateful))
 
 
 # ---------------------------------------------------------------------------

@@ -121,8 +121,16 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
 
     param_ps = model.pspecs(cfg)
     mspec_tree = model.mspecs(cfg)
-    ef_ps = specs_lib.ef_pspecs(param_ps, mspec_tree, dp_axes,
-                                stateful=compressor.stateful)
+    # per-leaf StatePartition: the dims specs for shard_map, plus the
+    # model-relation (replicated / sharded / LOCAL) the engine and the
+    # checkpoint layer need (model-LOCAL Q factors must not be treated as
+    # replicated — see docs/checkpoint.md "state pspecs")
+    state_parts = specs_lib.ef_partition(param_ps, mspec_tree, dp_axes,
+                                         compressor=compressor,
+                                         stateful=compressor.stateful)
+    ef_ps = specs_lib.partition_specs(state_parts)
+    if hasattr(compressor, "bind_state_partition"):
+        compressor.bind_state_partition(state_parts.comp)
 
     def local_step(params, ef_state, batch, key):
         # error buffers arrive with a leading local dp dim of 1 — unwrap
@@ -220,6 +228,21 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
 def _ef_in_specs(ef_ps: EFState):
     return EFState(error=ef_ps.error, momentum=ef_ps.momentum,
                    comp=ef_ps.comp, step=ef_ps.step)
+
+
+def train_state_partition(cfg: ModelConfig, mesh,
+                          compressor: Optional[Compressor] = None) -> EFState:
+    """The per-leaf :class:`~repro.core.engine.StatePartition` tree a
+    driver hands to ``repro.checkpoint.canonicalize_mesh`` /
+    ``replicate_mesh`` / ``stack_model_template`` — the same derivation
+    :func:`make_train_step` binds into the engine, recomputed standalone so
+    checkpoint tooling (and a restoring process that hasn't built a step
+    yet) can classify leaves without tracing anything."""
+    if compressor is None:
+        compressor = PowerSGDCompressor()
+    return specs_lib.ef_partition(
+        model.pspecs(cfg), model.mspecs(cfg), mesh_lib.data_axes(mesh),
+        compressor=compressor, stateful=compressor.stateful)
 
 
 # ---------------------------------------------------------------------------
@@ -329,8 +352,9 @@ def main():
     import argparse
     import time
 
-    from repro.checkpoint import (TrainState, restore_train_state,
-                                  save_train_state)
+    from repro.checkpoint import (TrainState, canonicalize_mesh,
+                                  replicate_mesh, restore_train_state,
+                                  save_train_state, stack_model_template)
     from repro.configs.base import get_config
     from repro.data.synthetic import MarkovLM
 
@@ -386,6 +410,10 @@ def main():
                                              compressor=compressor)
     controller = (compressor.controller()
                   if compressor.rank_schedule is not None else None)
+    # per-leaf state partition: which checkpoint leaves are model-LOCAL
+    # (per-model-rank Q factors) and must be gathered/re-sliced per rank
+    parts = train_state_partition(cfg, m, compressor)
+    model_size = int(m.shape["model"])
 
     key = jax.random.key(0)   # base key; per-step keys fold in the step index
     with jax.set_mesh(m):
@@ -397,15 +425,21 @@ def main():
     if args.resume:
         if not args.ckpt_dir:
             ap.error("--resume requires --ckpt-dir")
-        template = TrainState(params=params, ef=ef, key=key,
-                              data_step=jnp.zeros((), jnp.int32))
-        state, meta = restore_train_state(args.ckpt_dir, template)
+        template = TrainState(
+            params=params, ef=stack_model_template(ef, parts, model_size),
+            key=key, data_step=jnp.zeros((), jnp.int32))
+        state, meta = restore_train_state(args.ckpt_dir, template,
+                                          model_axis_size=model_size)
         if meta.get("rank_schedule") != args.rank_schedule:
             raise SystemExit(
                 f"--rank-schedule {args.rank_schedule!r} does not match the "
                 f"checkpoint's {meta.get('rank_schedule')!r} — resume with "
                 f"the schedule the run was started with")
-        params, ef, key = state.params, state.ef, state.key
+        # re-slice stacked model-LOCAL leaves: every model rank gets its
+        # own pre-save factors back (not rank-0's copy)
+        with jax.set_mesh(m):
+            params, ef = replicate_mesh(m, state.params, state.ef, parts)
+        key = state.key
         start = int(state.ef.step)
         if int(state.data_step) != start:
             raise SystemExit(
@@ -422,12 +456,17 @@ def main():
 
     def save_ckpt():
         # params/ef/key/residual are read at call time: the state *after*
-        # the step that just completed, i.e. "about to run step ef.step"
+        # the step that just completed, i.e. "about to run step ef.step".
+        # canonicalize_mesh gathers model-LOCAL leaves host-side into the
+        # stacked per-model-rank layout (no collectives)
+        p_c, ef_c = canonicalize_mesh(m, params, ef, parts)
         path = save_train_state(
             args.ckpt_dir,
-            TrainState(params=params, ef=ef, key=key,
+            TrainState(params=p_c, ef=ef_c, key=key,
                        data_step=jnp.asarray(int(ef.step), jnp.int32)),
             controller=controller, keep=args.ckpt_keep,
+            model_axis_size=model_size,
+            mesh_shape={a: int(m.shape[a]) for a in m.axis_names},
             extra_meta={"rank_schedule": args.rank_schedule,
                         "arch": args.arch, "last_residual": residual})
         return path

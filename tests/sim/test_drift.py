@@ -1,4 +1,5 @@
-"""Slow tier: the cross-substrate drift-tracking suite (ISSUE 6 tentpole).
+"""Slow tier: the cross-substrate drift-tracking suite (ISSUE 6 tentpole)
+plus the model-parallel checkpoint round-trip suite (ISSUE 7 tentpole).
 
 Promotes the ``docs/checkpoint.md`` substrate-caveat repro into committed
 regression tests on a real fake-device mesh (subprocess, 8 host devices —
@@ -15,7 +16,13 @@ XLA locks the device count at first init, so these cannot run in-process):
 * SimMesh and ``shard_map`` track each other under broadcast mode to a few
   f32 ULPs (collectives bit-identical; local vmap-vs-per-device compute
   reassociates a handful of sums — see check_drift.py for the measured
-  envelope).
+  envelope);
+* checkpointing that per-model-rank Q state is a separate failure mode
+  (check_model_ckpt.py): a plain ``np.asarray`` save keeps model rank 0's
+  replica of every model-LOCAL leaf and a restore broadcasts it — the
+  pre-fix corruption is pinned as a regression, and the mesh-aware
+  ``canonicalize_mesh``/``replicate_mesh`` path is certified bit-exact on
+  EVERY model rank across a save→kill→resume cycle.
 """
 
 import os
@@ -28,18 +35,20 @@ pytestmark = [pytest.mark.slow, pytest.mark.timeout(1200)]
 
 SCRIPT = os.path.join(os.path.dirname(__file__), "..", "subprocess_scripts",
                       "check_drift.py")
+CKPT_SCRIPT = os.path.join(os.path.dirname(__file__), "..",
+                           "subprocess_scripts", "check_model_ckpt.py")
 
 
-def _run(phase, timeout=1100):
+def _run(phase, timeout=1100, script=None):
     proc = subprocess.run(
-        [sys.executable, SCRIPT, phase],
+        [sys.executable, script or SCRIPT, phase],
         capture_output=True, text=True, timeout=timeout,
         env={**os.environ, "JAX_PLATFORMS": "cpu"},
     )
     if proc.returncode != 0:
         raise AssertionError(
-            f"check_drift.py {phase} failed\nstdout:\n{proc.stdout}\n"
-            f"stderr:\n{proc.stderr}")
+            f"{os.path.basename(script or SCRIPT)} {phase} failed\n"
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
     return proc.stdout
 
 
@@ -64,3 +73,20 @@ def test_simmesh_matches_shard_map_under_broadcast():
     f32 ULPs, with within-substrate bit-exactness on both sides."""
     out = _run("equiv")
     assert "SUBSTRATE_EQUIV_OK" in out
+
+
+def test_plain_checkpoint_keeps_rank0_copy_of_model_local_state():
+    """The ISSUE 7 regression pin: against the pre-fix plain save/restore
+    path, every model rank's restored warm-start factors are bit-equal to
+    model rank 0's pre-save copy and bit-different from their own."""
+    out = _run("regression", script=CKPT_SCRIPT)
+    assert "REGRESSION_PINNED_OK" in out
+
+
+def test_model_parallel_resume_bit_exact_on_every_rank():
+    """The fixed path on a 2×2 (data × model) mesh: canonicalize_mesh →
+    save → kill → stacked-template restore → replicate_mesh resumes with
+    every model rank's own Q/EF bytes, bit-equal per-step losses, and a
+    degree-mismatch guard that raises CheckpointError naming both sizes."""
+    out = _run("resume", script=CKPT_SCRIPT)
+    assert "MODEL_RESUME_OK" in out

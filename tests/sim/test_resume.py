@@ -126,6 +126,8 @@ def test_resume_bit_exact_fixed_rank(fixed_rank_runs):
     w, ckdir, (ref_losses, ref_params) = fixed_rank_runs
     cfg, sim, step_fn, _, params, ef, meta = restore_into(ckdir, w)
     assert meta["workers"] == w and int(ef.step[0]) == CKPT_AT
+    # same-W restore: the recorded rescale provenance is the identity path
+    assert meta["ef_rescale"] == {"from": w, "to": w, "path": "identity"}
     params, ef, tail = run(cfg, sim, step_fn, params, ef, None,
                            CKPT_AT, STEPS)
     assert tail == ref_losses[CKPT_AT:], (
@@ -188,13 +190,17 @@ def test_elastic_resume_1_to_4(fixed_rank_runs, tmp_path):
     canonical deterministic aggregation order, so the replicated-worker
     invariant is guaranteed rather than substrate luck), stays bit-identical
     across workers, and tracks the uninterrupted source-W run within the
-    Lemma-3 linearity tolerance."""
+    Lemma-3 linearity tolerance.  ISSUE 7 adds the ``meta["ef_rescale"]``
+    provenance record: which rescale path actually ran is asserted here, not
+    inferred from worker counts after the fact."""
     w, ckdir, (ref_losses, ref_params) = fixed_rank_runs
     w_new = 4 if w == 1 else 2
 
     cfg, sim, step_fn, _, params, ef, meta = restore_into(
         ckdir, w_new, sync_mode="broadcast")
     assert meta["workers"] == w
+    assert meta["ef_rescale"] == {
+        "from": w, "to": w_new, "path": "grow" if w == 1 else "shrink"}
     src, _ = restore_train_state(
         str(ckdir),
         TrainState(*canonicalize_sim(SimMesh(w), *_fresh_state(w)), key=KEY,

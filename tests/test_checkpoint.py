@@ -14,12 +14,13 @@ import msgpack
 import numpy as np
 import pytest
 
-from repro.checkpoint import (CheckpointError, TrainState, all_steps,
-                              checkpoint_meta, latest_step,
+from repro.checkpoint import (MODEL_AXIS_KEY, CheckpointError, TrainState,
+                              all_steps, checkpoint_meta, latest_step,
                               restore_checkpoint, restore_train_state,
                               save_checkpoint, save_train_state)
 from repro.checkpoint import msgpack_ckpt
-from repro.core.error_feedback import EFState, rescale_error_buffers
+from repro.core.error_feedback import (EFState, rescale_error_buffers,
+                                       rescale_path)
 from repro.core.powersgd import RankController
 
 
@@ -270,6 +271,54 @@ def test_controller_state_dict_roundtrip():
     np.testing.assert_array_equal(np.asarray(n1["w"]), np.asarray(n2["w"]))
 
 
+def test_restore_records_rescale_provenance(tmp_path):
+    """``meta["ef_rescale"]`` names the path that actually ran, and the
+    coprime fallback warns (per-worker identity is silently lost otherwise)."""
+    save_train_state(str(tmp_path), _train_state(workers=4))
+    _, meta = restore_train_state(str(tmp_path), _train_state(workers=4))
+    assert meta["ef_rescale"] == {"from": 4, "to": 4, "path": "identity"}
+    _, meta = restore_train_state(str(tmp_path), _train_state(workers=8))
+    assert meta["ef_rescale"] == {"from": 4, "to": 8, "path": "grow"}
+    with pytest.warns(UserWarning, match="coprime EF rescale 4 -> 3"):
+        _, meta = restore_train_state(str(tmp_path), _train_state(workers=3))
+    assert meta["ef_rescale"]["path"] == "coprime-mean"
+    # the saved meta itself is not polluted: provenance is restore-side only
+    assert "ef_rescale" not in checkpoint_meta(str(tmp_path))
+
+
+def test_rescale_path_values():
+    assert rescale_path(4, 4) == "identity"
+    assert rescale_path(1, 4) == "grow"
+    assert rescale_path(4, 2) == "shrink"
+    assert rescale_path(4, 3) == "coprime-mean"
+    assert rescale_path(3, 7) == "coprime-mean"
+
+
+def test_model_axis_mismatch_names_both_sizes(tmp_path):
+    """A degree-2 envelope restored while claiming degree 4 must fail with a
+    CheckpointError naming both sizes — model-local stacks cannot be
+    re-sliced across model degrees."""
+    save_train_state(str(tmp_path), _train_state(), model_axis_size=2,
+                     mesh_shape={"data": 2, "model": 2})
+    meta = checkpoint_meta(str(tmp_path))
+    assert meta[MODEL_AXIS_KEY] == 2
+    assert meta["mesh_shape"] == {"data": 2, "model": 2}
+    with pytest.raises(CheckpointError,
+                       match="model_axis_size=2.*model_axis_size=4"):
+        restore_train_state(str(tmp_path), _train_state(), model_axis_size=4)
+    # matching degree passes the guard
+    restore_train_state(str(tmp_path), _train_state(), model_axis_size=2)
+
+
+def test_legacy_envelope_treated_as_model_degree_1(tmp_path):
+    """Envelopes saved before the stacked layout (no model_axis_size in
+    meta) restore onto degree-1 meshes and are refused elsewhere."""
+    save_train_state(str(tmp_path), _train_state())  # default degree 1
+    restore_train_state(str(tmp_path), _train_state(), model_axis_size=1)
+    with pytest.raises(CheckpointError, match="model_axis_size=1.*=2"):
+        restore_train_state(str(tmp_path), _train_state(), model_axis_size=2)
+
+
 def test_rescale_error_buffers_semantics():
     e = {"w": jnp.asarray(np.random.RandomState(0).randn(4, 5), jnp.float32)}
     # identity
@@ -283,8 +332,9 @@ def test_rescale_error_buffers_semantics():
     s = np.asarray(rescale_error_buffers(e, 2)["w"])
     np.testing.assert_allclose(
         s, np.asarray(e["w"]).reshape(2, 2, 5).mean(1), rtol=1e-6)
-    # coprime 4→3: every buffer is the global mean
-    c = np.asarray(rescale_error_buffers(e, 3)["w"])
+    # coprime 4→3: every buffer is the global mean (and the fallback warns)
+    with pytest.warns(UserWarning, match="coprime"):
+        c = np.asarray(rescale_error_buffers(e, 3)["w"])
     np.testing.assert_allclose(
         c, np.broadcast_to(np.asarray(e["w"]).mean(0), (3, 5)), rtol=1e-6)
     # the invariant all three branches share

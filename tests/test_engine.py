@@ -14,10 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import PartitionSpec as P
 
-from repro.core import engine, matrixize
+from repro.core import engine, matrixize, powersgd
 from repro.core.compressors import IdentityCompressor, PowerSGDCompressor
 from repro.core.dist import CollectiveStats, MeshCtx, SimBackend
+from repro.core.engine import MODEL_LOCAL, MODEL_REPLICATED, MODEL_SHARDED
 from repro.core.simmesh import SimMesh
 
 KEY = jax.random.key(0)
@@ -293,6 +295,61 @@ def test_broadcast_mode_weighted_matches_allreduce_semantics():
                                rtol=1e-6)
     np.testing.assert_array_equal(run("broadcast", jnp.zeros(W)),
                                   np.zeros((W, 5)))
+
+
+# ---------------------------------------------------------------------------
+# per-leaf state partition: factor classification + bucket flags (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+def _w(shape):
+    return jax.random.normal(KEY, shape)
+
+
+def test_factor_partition_classification():
+    """The three-way model relation of a PowerSGD Q factor, from the owning
+    parameter's PartitionSpec: column-parallel (m-sharded) weights have
+    honestly model-sharded factors, row-parallel (n-sharded) weights have
+    model-LOCAL ones (per-rank content behind a replicated-shaped spec),
+    unsharded weights replicate, uncompressed leaves have no factor."""
+    spec2d = matrixize.default_spec(_w((8, 16)))
+    # column-parallel: m dim carries "model" → factor is m-sharded, honest
+    part = powersgd.factor_partition(P(None, "model"), spec2d)
+    assert part.model == MODEL_SHARDED and part.spec == P("model", None)
+    # row-parallel: n dim carries "model" → per-rank Q = M_localᵀP̂ content
+    # behind a dims-replicated spec: model-LOCAL
+    part = powersgd.factor_partition(P("model", None), spec2d)
+    assert part.model == MODEL_LOCAL and part.spec == P(None, None)
+    part = powersgd.factor_partition(P(None, None), spec2d)
+    assert part.model == MODEL_REPLICATED and part.spec == P(None, None)
+    # uncompressed (1-D) leaves carry no factor at all
+    bias_spec = matrixize.default_spec(_w((16,)))
+    assert powersgd.factor_partition(P(None), bias_spec) is None
+
+
+def test_bucket_model_sharded_flags():
+    """MatrixPayloads.build learns which buckets hold non-whole-mesh-
+    replicated factors from the partition tree — the signal the checkpoint
+    layer keys its mesh-aware gather on."""
+    grads = {"loc": _w((8, 16)), "rep": _w((12, 20)), "bias": jnp.ones((16,))}
+    specs = {k: matrixize.default_spec(v) for k, v in grads.items()}
+    pspecs = {"loc": P("model", None), "rep": P(None, None), "bias": P(None)}
+    partition = powersgd.state_partition(pspecs, specs)
+    assert partition["loc"].model == MODEL_LOCAL
+    assert partition["rep"].model == MODEL_REPLICATED
+    assert partition["bias"] is None
+
+    state = {"loc": _w((16, 2)), "rep": _w((20, 2)), "bias": None}
+    mp = engine.MatrixPayloads.build(grads, state, specs, dtype=jnp.float32,
+                                     partition=partition)
+    flags = {}
+    for bucket, flag in zip(mp.plan.buckets, mp.bucket_model_sharded):
+        for e in bucket.entries:
+            flags[jax.tree_util.keystr(mp.leaves[e.index][0])] = flag
+    assert flags == {"['loc']": True, "['rep']": False}, flags
+
+    # without a partition tree the information is declared unknown, not False
+    mp2 = engine.MatrixPayloads.build(grads, state, specs, dtype=jnp.float32)
+    assert mp2.bucket_model_sharded is None
 
 
 @pytest.mark.parametrize("name,comp,reduces,broadcasts", [

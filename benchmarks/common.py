@@ -450,7 +450,8 @@ def broadcast_time(bytes_root: float, workers: int,
 
 
 def comm_time_from_stats(stats, workers: int,
-                         backend: str = "nccl_10gbit") -> float:
+                         backend: str = "nccl_10gbit", *,
+                         overlap_compute_s: float = 0.0) -> float:
     """Seconds of modeled gradient exchange for one recorded step.
 
     Walks a :class:`repro.core.dist.CollectiveStats` trace and applies the
@@ -459,6 +460,12 @@ def comm_time_from_stats(stats, workers: int,
     entries pay the (W−1)-fold receive traffic.  This is the honest
     per-engine model: latency multiplies by the number of collectives, which
     is exactly what the fused transport engine minimizes.
+
+    ``overlap_compute_s`` models a pipelined (``staleness="one_step"``)
+    schedule where the exchange runs concurrently with the next step's
+    compute (e.g. :meth:`repro.launch.roofline.Roofline.compute_s`): the
+    return value becomes the *exposed* comm, ``max(0, total − overlap)`` —
+    the only part that lengthens the critical path.
     """
     total = 0.0
     for size, itemsize, kind in zip(stats.sizes, stats.itemsizes, stats.kinds):
@@ -467,7 +474,7 @@ def comm_time_from_stats(stats, workers: int,
         else:
             total += comm_time(size * itemsize, workers, kind == "reduce",
                                backend)
-    return total
+    return max(0.0, total - overlap_compute_s)
 
 
 def measure_coding_time(compressor: Compressor, params, specs,

@@ -59,6 +59,8 @@ def main() -> None:
             params_small, specs_small),
         "zoo_transport_profile": lambda: tables.zoo_transport_profile(
             params_small, specs_small),
+        "overlap_profile": lambda: tables.overlap_profile(
+            params_small, specs_small),
         "appendixD_transformer": lambda: tables.appendixD_transformer(spec),
     }
     if args.only:

@@ -58,11 +58,16 @@ from repro.core import error_feedback
 from repro.core.engine import MODEL_LOCAL, StatePartition
 from repro.core.error_feedback import EFState
 
-TRAIN_STATE_VERSION = 1
+# v2 (ISSUE 8): the envelope may carry EFState.inflight — the one-step-stale
+# pipeline's in-flight aggregate.  v1 envelopes (no inflight records at all)
+# restore into both pipeline modes: a missing buffer zero-fills (one extra
+# pipeline-bubble step), a surplus one is dropped — see restore_train_state.
+TRAIN_STATE_VERSION = 2
 
 # envelope-leaf path prefixes with relaxed shape matching (see module doc)
 _COMP_PREFIX = "['ef'].comp"
 _ERROR_PREFIX = "['ef'].error"
+_INFLIGHT_PREFIX = "['ef'].inflight"
 
 
 @dataclasses.dataclass
@@ -151,6 +156,61 @@ def save_train_state(directory: str, state: TrainState, *,
                            _as_tree(state, key_data), keep=keep, meta=meta)
 
 
+def _splice_inflight(payload: dict, template_tree) -> Tuple[dict, Optional[str]]:
+    """Align the envelope's leaf records with the template around the
+    ``EFState.inflight`` leaves, so envelopes cross the pipeline-mode (and
+    version) boundary instead of failing the strict structure check:
+
+    * template expects an in-flight buffer the envelope lacks (legacy/v1 or
+      ``staleness="none"`` save restored into ``"one_step"``) — synthesize
+      zero records; the resumed run pays exactly one extra pipeline-bubble
+      step, the honest semantics of "nothing was in flight".
+    * envelope carries a buffer the template has no slot for (``one_step``
+      save restored into ``"none"``) — drop it; the synchronous path never
+      applies it.
+
+    Returns ``(payload, note)`` — ``note`` is a provenance string for
+    ``meta["inflight"]`` (``None`` when the structures already agree and the
+    records pass through untouched for bit-exact restore)."""
+    t_pairs, _ = jax.tree_util.tree_flatten_with_path(
+        template_tree, is_leaf=lambda x: x is None)
+    t_paths = [jax.tree_util.keystr(p) for p, _ in t_pairs]
+    enc = payload["leaves"]
+
+    def is_inflight(path):
+        return (path or "").startswith(_INFLIGHT_PREFIX)
+
+    enc_inflight = {d.get("path"): d for d in enc if is_inflight(d.get("path"))}
+    if set(enc_inflight) == {p for p in t_paths if is_inflight(p)}:
+        return payload, None
+    others_list = [d for d in enc if not is_inflight(d.get("path"))]
+    if len(others_list) != sum(1 for p in t_paths if not is_inflight(p)):
+        return payload, None  # non-inflight mismatch: restore_tree reports it
+    others = iter(others_list)
+    spliced, zero_filled = [], False
+    for path, (_, want) in zip(t_paths, t_pairs):
+        if not is_inflight(path):
+            spliced.append(next(others))
+        elif path in enc_inflight:
+            spliced.append(enc_inflight[path])
+        elif want is None:
+            spliced.append({"kind": "none", "path": path})
+        else:
+            zero_filled = True
+            spliced.append({
+                "kind": "array",
+                "dtype": np.dtype(want.dtype).str,
+                "shape": list(want.shape),
+                "data": np.zeros(tuple(want.shape), want.dtype).tobytes(),
+                "path": path,
+            })
+    t_path_set = set(t_paths)
+    dropped = any(p not in t_path_set for p in enc_inflight)
+    note = ("zero_filled" if zero_filled
+            else "dropped" if dropped else "absent")
+    return {**payload, "leaves": spliced}, note
+
+
 def restore_train_state(directory: str, template: TrainState,
                         step: Optional[int] = None, *,
                         model_axis_size: Optional[int] = None
@@ -188,8 +248,11 @@ def restore_train_state(directory: str, template: TrainState,
         return False
 
     key_data, _ = key_to_data(template.key)
-    tree = restore_tree(payload, _as_tree(template, key_data),
-                        shape_ok=shape_ok)
+    t_tree = _as_tree(template, key_data)
+    payload, inflight_note = _splice_inflight(payload, t_tree)
+    if inflight_note:
+        meta["inflight"] = inflight_note
+    tree = restore_tree(payload, t_tree, shape_ok=shape_ok)
     ef: EFState = tree["ef"]
     w_new = _error_workers(template.ef)
     w_old = _error_workers(ef)
@@ -200,7 +263,8 @@ def restore_train_state(directory: str, template: TrainState,
         if w_old != w_new:
             ef = EFState(
                 error=error_feedback.rescale_error_buffers(ef.error, w_new),
-                momentum=ef.momentum, comp=ef.comp, step=ef.step)
+                momentum=ef.momentum, comp=ef.comp, step=ef.step,
+                inflight=ef.inflight)
     state = TrainState(
         params=tree["params"], ef=ef,
         key=key_from_data(tree["key_data"], meta.get("key_dtype", "raw")),
@@ -266,9 +330,12 @@ def canonicalize_mesh(mesh, params, ef: EFState, partition: EFState,
         assert sorted(per) == list(range(size)), sorted(per)
         return np.stack([per[c] for c in range(size)])
 
+    # the in-flight aggregate is sharded like params (never model-LOCAL),
+    # so it serializes correctly without a gather
     return params, EFState(
         error=ef.error, momentum=ef.momentum,
-        comp=_local_map(gather, ef.comp, partition.comp), step=ef.step)
+        comp=_local_map(gather, ef.comp, partition.comp), step=ef.step,
+        inflight=ef.inflight)
 
 
 def replicate_mesh(mesh, params, ef: EFState, partition: EFState,
@@ -306,7 +373,8 @@ def replicate_mesh(mesh, params, ef: EFState, partition: EFState,
 
     return params, EFState(
         error=ef.error, momentum=ef.momentum,
-        comp=_local_map(scatter, ef.comp, partition.comp), step=ef.step)
+        comp=_local_map(scatter, ef.comp, partition.comp), step=ef.step,
+        inflight=ef.inflight)
 
 
 def stack_model_template(ef: EFState, partition: EFState,
@@ -326,7 +394,7 @@ def stack_model_template(ef: EFState, partition: EFState,
 
     return EFState(error=ef.error, momentum=ef.momentum,
                    comp=_local_map(stack, ef.comp, partition.comp),
-                   step=ef.step)
+                   step=ef.step, inflight=ef.inflight)
 
 
 # ---------------------------------------------------------------------------
@@ -341,7 +409,8 @@ def canonicalize_sim(sim, params, ef: EFState) -> Tuple[Any, EFState]:
         error=ef.error,
         momentum=sim.unreplicate(ef.momentum),
         comp=sim.unreplicate(ef.comp),
-        step=sim.unreplicate(ef.step))
+        step=sim.unreplicate(ef.step),
+        inflight=sim.unreplicate(ef.inflight))
 
 
 def replicate_sim(sim, params, ef: EFState) -> Tuple[Any, EFState]:
@@ -353,4 +422,5 @@ def replicate_sim(sim, params, ef: EFState) -> Tuple[Any, EFState]:
         error=error_feedback.rescale_error_buffers(ef.error, sim.workers),
         momentum=sim.replicate(ef.momentum),
         comp=sim.replicate(ef.comp),
-        step=sim.replicate(ef.step))
+        step=sim.replicate(ef.step),
+        inflight=sim.replicate(ef.inflight))

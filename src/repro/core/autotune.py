@@ -108,16 +108,25 @@ class HardwareModel:
         return (self.alpha + wire_bytes / self.bw) * (workers - 1)
 
 
-def comm_time_from_stats(stats, workers: int, hw: HardwareModel) -> float:
+def comm_time_from_stats(stats, workers: int, hw: HardwareModel, *,
+                         overlap_compute_s: float = 0.0) -> float:
     """α-β time of one *recorded* step (`repro.core.dist.CollectiveStats`):
     each collective at its actual wire size, itemsize and transport kind.
     This is how a measured trace calibrates/validates a :class:`TunePlan`
-    (compare against ``TunePlan.predicted_comm_s``)."""
+    (compare against ``TunePlan.predicted_comm_s``).
+
+    ``overlap_compute_s`` prices the one-step-stale pipeline
+    (``staleness="one_step"``): comm that runs concurrently with that much
+    compute (the roofline model's fwd+bwd time — see
+    :meth:`repro.launch.roofline.Roofline.compute_s`) is hidden, and only
+    the *exposed* remainder ``max(0, comm − compute)`` stays on the
+    critical path.  The default 0.0 is the synchronous schedule (all comm
+    exposed), so existing call sites are unchanged."""
     total = 0.0
     for size, itemsize, kind in zip(stats.sizes, stats.itemsizes,
                                     stats.kinds):
         total += hw.collective_time(size * itemsize, workers, kind)
-    return total
+    return max(0.0, total - overlap_compute_s)
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +216,8 @@ def autotune(shapes, specs, *, bits_budget: int, workers: int,
              wire_dtypes: Sequence[str] = ("float32", "bfloat16"),
              max_chunk_bytes_options: Sequence[Optional[int]] = (None,),
              tolerance: float = 0.25,
-             bucket_residuals: Optional[Sequence[float]] = None) -> TunePlan:
+             bucket_residuals: Optional[Sequence[float]] = None,
+             overlap_compute_s: float = 0.0) -> TunePlan:
     """Select per-bucket ``rank`` + global ``(wire_dtype, max_chunk_bytes)``.
 
     ``bits_budget`` bounds the *payload* bits per step per worker (the
@@ -218,6 +228,13 @@ def autotune(shapes, specs, *, bits_budget: int, workers: int,
     dtypes/chunk caps.  ``bucket_residuals`` (ordered like the bucket plan,
     e.g. from a ``track_residual=True`` probe step) steers the walk-down
     toward buckets whose subspace already covers their gradients.
+
+    ``overlap_compute_s`` prices a pipelined (``staleness="one_step"``)
+    schedule: pass the step's compute time (e.g. from
+    :meth:`repro.launch.roofline.Roofline.compute_s`) and candidates are
+    compared by *exposed* comm — ``max(0, modeled − overlap_compute_s)`` —
+    matching :func:`comm_time_from_stats`'s overlap term, so the tuner
+    trades bit budget toward rank once latency is hidden.
 
     Deterministic: same inputs → same plan, on every worker.
     """
@@ -303,6 +320,11 @@ def autotune(shapes, specs, *, bits_budget: int, workers: int,
         for mcb in max_chunk_bytes_options:
             t = _phase_time([d.wire_floats for d in decisions], unc_floats,
                             itemsize, workers, hw, mcb)
+            # Pipelined (one-step-stale) schedules hide comm behind the
+            # step's compute; price candidates by *exposed* time so the
+            # tuner stops shrinking the wire once comm fits under compute
+            # and spends the bit budget on rank instead.
+            t = max(0.0, t - overlap_compute_s)
             if best_time is None or t < best_time:
                 best_cfg, best_time = (wd, mcb), t
 

@@ -239,7 +239,7 @@ class PowerSGDCompressor(Compressor):
                  num_iters=1, error_mode="global", use_pallas=False,
                  bucketing="auto", bucket_pad_tolerance=0.25,
                  wire_dtype="auto", max_chunk_bytes=None,
-                 rank_schedule=None, track_residual=False):
+                 rank_schedule=None, track_residual=False, pipeline=False):
         super().__init__(
             transport="per_leaf" if bucketing == "off" else "fused",
             wire_dtype=wire_dtype, max_chunk_bytes=max_chunk_bytes)
@@ -254,7 +254,7 @@ class PowerSGDCompressor(Compressor):
             num_iters=num_iters, error_mode=error_mode, use_pallas=use_pallas,
             bucketing=bucketing, bucket_pad_tolerance=bucket_pad_tolerance,
             wire_dtype=wire_dtype, max_chunk_bytes=max_chunk_bytes,
-            track_residual=track_residual,
+            track_residual=track_residual, pipeline=pipeline,
         )
         if num_iters > 1:
             self.name = f"powersgd_best_approx_{num_iters}it"

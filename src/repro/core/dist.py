@@ -465,7 +465,8 @@ class MeshCtx:
     def pmean_flat(self, parts: Sequence[jax.Array], *,
                    wire_dtype: str = "auto",
                    max_chunk_bytes: Optional[int] = None,
-                   sync: Optional[bool] = None) -> List[jax.Array]:
+                   sync: Optional[bool] = None,
+                   interleave: bool = False) -> List[jax.Array]:
         """Fused all-reduce-mean: O(1) collectives for a whole list of arrays.
 
         Ravels every part, concatenates into contiguous wire buffers (one per
@@ -488,6 +489,16 @@ class MeshCtx:
         ``sync=False`` keeps the canonical order but suppresses that record
         — for multi-phase transports (PowerSGD's P/Q reduces) that issue
         one fused end-of-step :meth:`broadcast_flat` instead.
+
+        ``interleave=True`` emits the double-buffered schedule instead of
+        the serial one: the reduce for chunk b is issued *before* chunk b−1
+        is unpacked, so no chunk's decompression sits between consecutive
+        collectives in the dataflow graph and the runtime is free to overlap
+        chunk b's wire time with chunk b−1's decode.  Chunks, wire bytes,
+        reduction order and :class:`CollectiveStats` records (made at issue
+        time) are identical to the serial schedule — only the unpack points
+        move — so results are bit-identical and budget guards see the same
+        trace.
         """
         from repro.core import matrixize  # local: dist must stay import-light
 
@@ -496,17 +507,30 @@ class MeshCtx:
             return []
         plan = matrixize.plan_flat(parts, wire_dtype=wire_dtype,
                                    max_chunk_bytes=max_chunk_bytes)
-        out: dict = {}
-        for chunk in plan.chunks:
+
+        def issue(chunk):
             buf = matrixize.pack_flat(chunk, parts)
             self._record_data(buf)
             if self._synced:
                 if sync is not False:
                     self._record_data(buf, kind="broadcast")
-                buf = self._canonical_reduce(buf, mean=True)
-            elif self.data_axes:
-                buf = self.backend.pmean(buf, self.data_axes)
-            out.update(matrixize.unpack_flat(chunk, buf))
+                return self._canonical_reduce(buf, mean=True)
+            if self.data_axes:
+                return self.backend.pmean(buf, self.data_axes)
+            return buf
+
+        out: dict = {}
+        pending = None  # the in-flight (chunk, reduced buffer) pair
+        for chunk in plan.chunks:
+            buf = issue(chunk)
+            if interleave:
+                if pending is not None:
+                    out.update(matrixize.unpack_flat(*pending))
+                pending = (chunk, buf)
+            else:
+                out.update(matrixize.unpack_flat(chunk, buf))
+        if pending is not None:
+            out.update(matrixize.unpack_flat(*pending))
         return [out[i] for i in range(len(parts))]
 
     def broadcast_flat(self, parts: Sequence[jax.Array], *,

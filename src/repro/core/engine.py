@@ -198,6 +198,48 @@ class Transport:
         return dist.weighted_mean(stacked, w, lambda v: jnp.sum(v, axis=0))
 
 
+@dataclasses.dataclass(frozen=True)
+class PipelinedTransport(Transport):
+    """Double-buffered :class:`Transport` — the engine half of the one-step-
+    stale pipeline (ISSUE 8).
+
+    Two levels of overlap, both bit-identical to the serial transport:
+
+    * **Intra-step** — :meth:`reduce_mean` emits the interleaved chunk
+      schedule (``MeshCtx.pmean_flat(interleave=True)``): the fused reduce
+      for payload chunk b is issued before chunk b−1 is unpacked, so the
+      two-phase PowerSGD loop decompresses bucket b−1 while bucket b is on
+      the wire.  Same chunks, same bytes, same reduction order, and
+      :class:`~repro.core.dist.CollectiveStats` records at *issue* time —
+      the collective-budget guards see exactly the serial trace.
+
+    * **Cross-step** — :meth:`shift` is the explicit double-buffer rotation
+      for ``staleness="one_step"``: hand it this step's fresh aggregate and
+      the carried in-flight buffer, get back the buffer to *apply* now
+      (step t−1's) and the new in-flight state (step t's).  The in-flight
+      tree is explicit state so the train step can checkpoint it
+      (``EFState.inflight``).
+    """
+
+    def reduce_mean(self, parts: Sequence[jax.Array],
+                    sync: Optional[bool] = None) -> List[jax.Array]:
+        return self.ctx.pmean_flat(parts, wire_dtype=self.wire_dtype,
+                                   max_chunk_bytes=self.max_chunk_bytes,
+                                   sync=sync, interleave=True)
+
+    @staticmethod
+    def shift(fresh, inflight):
+        """Rotate the double buffer: returns ``(apply_now, new_inflight)``
+        = ``(inflight, fresh)``.  Pure structure — numerics untouched."""
+        return inflight, fresh
+
+    @staticmethod
+    def init_inflight(params):
+        """The step-0 in-flight buffer: a zero aggregate shaped like
+        ``params`` (the pipeline bubble applies no update)."""
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
 # ---------------------------------------------------------------------------
 # tree walking shared by every engine path
 # ---------------------------------------------------------------------------

@@ -66,13 +66,21 @@ class EFState:
     momentum: Any     # post-compression momentum m (tree like params)
     comp: Any         # compressor state (e.g. PowerSGD Q factors)
     step: jax.Array   # int32 step counter
+    # One-step-stale pipeline only (``staleness="one_step"``): the aggregated
+    # update Δ'_{t-1} produced at the previous step but not yet applied —
+    # the in-flight half of the double-buffered schedule.  ``None`` under the
+    # synchronous default, so existing 4-field constructions keep their exact
+    # tree structure and numerics.
+    inflight: Any = None
 
 
 jax.tree_util.register_dataclass(
-    EFState, data_fields=["error", "momentum", "comp", "step"], meta_fields=[])
+    EFState, data_fields=["error", "momentum", "comp", "step", "inflight"],
+    meta_fields=[])
 
 
-def init_state(compressor: Compressor, params, specs, key: jax.Array) -> EFState:
+def init_state(compressor: Compressor, params, specs, key: jax.Array,
+               *, staleness: str = "none") -> EFState:
     zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
     shapes = jax.tree_util.tree_map(
         lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
@@ -81,6 +89,8 @@ def init_state(compressor: Compressor, params, specs, key: jax.Array) -> EFState
         momentum=jax.tree_util.tree_map(jnp.zeros_like, params),
         comp=compressor.init(shapes, specs, key),
         step=jnp.zeros((), jnp.int32),
+        inflight=(jax.tree_util.tree_map(jnp.zeros_like, params)
+                  if staleness == "one_step" else None),
     )
 
 
@@ -160,7 +170,7 @@ def replace_comp(state: EFState, comp) -> EFState:
     warm-start factors; error buffers, momentum and the step counter pass
     through bit-exactly (``tests/sim/test_rank_transitions.py`` pins this)."""
     return EFState(error=state.error, momentum=state.momentum, comp=comp,
-                   step=state.step)
+                   step=state.step, inflight=state.inflight)
 
 
 def apply_updates(
@@ -177,12 +187,31 @@ def apply_updates(
     key: Optional[jax.Array] = None,
     use_pallas_apply: bool = False,
     start_compress_step: int = 0,
+    staleness: str = "none",
 ):
     """One EF-SGD step.  Returns (new_params, new_state, aux).
 
     ``start_compress_step=k`` aggregates the first k steps dense (see module
     docstring); with the default 0 every step compresses.
+
+    ``staleness="one_step"`` turns on the delayed-parameter-update pipeline
+    (the DPU/ACCO pattern): the update *applied* at step t is the aggregate
+    Δ'_{t-1} carried in ``state.inflight``, and this step's fresh aggregate
+    Δ'_t is parked as the next ``inflight`` — so the fused collectives that
+    produce Δ'_t never sit between the gradient computation and the
+    parameter write of the same step.  The error buffers are untouched by
+    the delay: ``e_w = Δ_w − recon_t`` memorizes exactly what step t's
+    compression dropped, regardless of *when* the aggregate is applied, so
+    Alg. 2's EF guarantee absorbs the one-step shift like any other bounded
+    perturbation.  Step 0 applies the zero aggregate (the pipeline bubble).
+    ``state.inflight`` must be a params-shaped tree (see :func:`init_state`).
     """
+    if staleness not in ("none", "one_step"):
+        raise ValueError(f"unknown staleness mode {staleness!r}")
+    if staleness == "one_step" and state.inflight is None:
+        raise ValueError(
+            "staleness='one_step' needs EFState.inflight initialized "
+            "(init_state(..., staleness='one_step'))")
     if key is not None:
         key = jax.random.fold_in(key, state.step)
 
@@ -203,23 +232,31 @@ def apply_updates(
     # e_w = Δ_w − recon
     new_error = jax.tree_util.tree_map(jnp.subtract, deltas, out.recon)
 
+    # Synchronous: apply this step's aggregate.  One-step-stale: apply the
+    # in-flight aggregate from step t−1 and park this step's for step t+1.
+    if staleness == "one_step":
+        applied, new_inflight = state.inflight, out.agg
+    else:
+        applied, new_inflight = out.agg, state.inflight
+
     if use_pallas_apply:
         from repro.kernels import ops
 
         new_params, new_momentum = ops.ef_apply_tree(
-            params, out.agg, state.momentum, lr=lr, momentum=momentum)
+            params, applied, state.momentum, lr=lr, momentum=momentum)
     else:
         # m ← λ m + Δ' ;  x ← x − γ (Δ' + m)
         new_momentum = jax.tree_util.tree_map(
-            lambda m, d: momentum * m + d, state.momentum, out.agg)
+            lambda m, d: momentum * m + d, state.momentum, applied)
         new_params = jax.tree_util.tree_map(
-            lambda x, d, m: x - lr * (d + m), params, out.agg, new_momentum)
+            lambda x, d, m: x - lr * (d + m), params, applied, new_momentum)
 
     new_state = EFState(
         error=new_error,
         momentum=new_momentum,
         comp=out.state,
         step=state.step + 1,
+        inflight=new_inflight,
     )
     aux = {"bits_per_worker": out.bits_per_worker}
     if getattr(out, "metrics", None):

@@ -175,6 +175,9 @@ class PowerSGDConfig:
     track_residual: bool = False           # emit ‖M − P̂Qᵀ‖/‖M‖ metrics
     #                                        (CompressOut.metrics; required by
     #                                        ResidualEnergyRank)
+    pipeline: bool = False                 # engine.PipelinedTransport: issue
+    #                                        chunk b's reduce before decoding
+    #                                        b−1 (bit-identical; ISSUE 8)
 
 
 # ---------------------------------------------------------------------------
@@ -625,8 +628,10 @@ def _compress_aggregate_bucketed(
         tolerance=cfg.bucket_pad_tolerance,
         resample_key=None if cfg.warm_start else key,
         partition=partition)
-    transport = engine.Transport(ctx=ctx, wire_dtype=cfg.wire_dtype,
-                                 max_chunk_bytes=cfg.max_chunk_bytes)
+    transport_cls = (engine.PipelinedTransport if cfg.pipeline
+                     else engine.Transport)
+    transport = transport_cls(ctx=ctx, wire_dtype=cfg.wire_dtype,
+                              max_chunk_bytes=cfg.max_chunk_bytes)
     m_bufs, q_bufs = payloads.m_bufs, payloads.q_bufs
 
     # -- power iteration: 2 fused collectives per round ---------------------

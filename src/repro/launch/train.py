@@ -53,6 +53,12 @@ class TrainHyper:
     #   switch retraces the jitted step): build a RankController from the
     #   compressor and transition ef.comp between steps — see main() below.
     track_residual: bool = False    # emit residual_ratio in the step metrics
+    staleness: str = "none"         # "one_step" = delayed-parameter-update
+    #   pipeline (ISSUE 8): apply step t−1's aggregated update while step t's
+    #   gradients are computed, the in-flight aggregate carried in
+    #   EFState.inflight and the engine on the double-buffered
+    #   PipelinedTransport; error feedback absorbs the one-step delay.
+    #   "none" (default) is the synchronous path, bit-identical to pre-ISSUE-8.
     sync_mode: str = "allreduce"    # "broadcast" = replica-deterministic
     #   data-axis aggregation (canonical reduction order + rank-0 broadcast;
     #   see repro.core.dist.MeshCtx.sync_mode) — bit-identical replicas on
@@ -117,7 +123,8 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
             rank=hyper.rank, orthogonalizer=hyper.orthogonalizer,
             use_pallas=hyper.use_pallas, bucketing=hyper.bucketing,
             wire_dtype=hyper.wire_dtype, rank_schedule=hyper.rank_schedule,
-            track_residual=hyper.track_residual)
+            track_residual=hyper.track_residual,
+            pipeline=hyper.staleness == "one_step")
 
     param_ps = model.pspecs(cfg)
     mspec_tree = model.mspecs(cfg)
@@ -129,6 +136,11 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
                                          compressor=compressor,
                                          stateful=compressor.stateful)
     ef_ps = specs_lib.partition_specs(state_parts)
+    if hyper.staleness == "one_step":
+        # the in-flight aggregate is params-shaped: data-replicated,
+        # model-sharded exactly like the params it will be applied to
+        ef_ps = EFState(error=ef_ps.error, momentum=ef_ps.momentum,
+                        comp=ef_ps.comp, step=ef_ps.step, inflight=param_ps)
     if hasattr(compressor, "bind_state_partition"):
         compressor.bind_state_partition(state_parts.comp)
 
@@ -136,7 +148,8 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
         # error buffers arrive with a leading local dp dim of 1 — unwrap
         error_local = jax.tree_util.tree_map(lambda e: e[0], ef_state.error)
         state = EFState(error=error_local, momentum=ef_state.momentum,
-                        comp=ef_state.comp, step=ef_state.step)
+                        comp=ef_state.comp, step=ef_state.step,
+                        inflight=ef_state.inflight)
 
         def loss_fn(p):
             return model.loss_fn(p, batch, cfg, ctx, window=hyper.window,
@@ -150,12 +163,13 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
             compressor, params, grads, state, mspec_tree,
             lr=lr, momentum=hyper.momentum, weight_decay=hyper.weight_decay,
             ctx=ctx, key=key, use_pallas_apply=hyper.use_pallas,
-            start_compress_step=hyper.start_compress_step)
+            start_compress_step=hyper.start_compress_step,
+            staleness=hyper.staleness)
 
         new_state = EFState(
             error=jax.tree_util.tree_map(lambda e: e[None], new_state.error),
             momentum=new_state.momentum, comp=new_state.comp,
-            step=new_state.step)
+            step=new_state.step, inflight=new_state.inflight)
         if "residual_ratio" in aux:  # host-side RankControllers read this
             metrics["residual_ratio"] = aux["residual_ratio"]
         metrics = {k: lax.pmean(v, all_axes) for k, v in metrics.items()}
@@ -199,6 +213,7 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
             momentum=params_sds,
             comp=comp_sds,
             step=jax.ShapeDtypeStruct((), jnp.int32),
+            inflight=(params_sds if hyper.staleness == "one_step" else None),
         )
         params_sds = specs_lib.with_sharding(params_sds, param_ps, mesh)
         ef_sds = specs_lib.with_sharding(ef_sds, ef_ps, mesh)
@@ -219,6 +234,8 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
             momentum=jax.tree_util.tree_map(jnp.zeros_like, params),
             comp=comp,
             step=jnp.zeros((), jnp.int32),
+            inflight=(jax.tree_util.tree_map(jnp.zeros_like, params)
+                      if hyper.staleness == "one_step" else None),
         )
         return params, ef
 
@@ -227,7 +244,7 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
 
 def _ef_in_specs(ef_ps: EFState):
     return EFState(error=ef_ps.error, momentum=ef_ps.momentum,
-                   comp=ef_ps.comp, step=ef_ps.step)
+                   comp=ef_ps.comp, step=ef_ps.step, inflight=ef_ps.inflight)
 
 
 def train_state_partition(cfg: ModelConfig, mesh,
@@ -279,7 +296,8 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
             rank=hyper.rank, orthogonalizer=hyper.orthogonalizer,
             use_pallas=hyper.use_pallas, bucketing=hyper.bucketing,
             wire_dtype=hyper.wire_dtype, rank_schedule=hyper.rank_schedule,
-            track_residual=hyper.track_residual)
+            track_residual=hyper.track_residual,
+            pipeline=hyper.staleness == "one_step")
     mspec_tree = model.mspecs(cfg)
 
     def worker_step(params, ef_state, batch, key, weight):
@@ -299,7 +317,8 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
             compressor, params, grads, ef_state, mspec_tree,
             lr=lr, momentum=hyper.momentum, weight_decay=hyper.weight_decay,
             ctx=ctx, key=key, use_pallas_apply=hyper.use_pallas,
-            start_compress_step=hyper.start_compress_step)
+            start_compress_step=hyper.start_compress_step,
+            staleness=hyper.staleness)
 
         # metrics aggregate through the backend directly: they are
         # observability, not gradient traffic, and must not perturb the
@@ -338,6 +357,8 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
             momentum=jax.tree_util.tree_map(jnp.zeros_like, params),
             comp=comp,
             step=jnp.zeros((), jnp.int32),
+            inflight=(jax.tree_util.tree_map(jnp.zeros_like, params)
+                      if hyper.staleness == "one_step" else None),
         )
         return sim.replicate(params), sim.replicate(ef)
 
@@ -374,6 +395,13 @@ def main():
                     help="'broadcast' makes every data-axis aggregate "
                          "replica-deterministic (canonical reduction order "
                          "+ rank-0 broadcast; see docs/checkpoint.md)")
+    ap.add_argument("--staleness", default="none",
+                    choices=("none", "one_step"),
+                    help="'one_step' turns on the delayed-parameter-update "
+                         "pipeline: apply step t-1's aggregated compressed "
+                         "update while step t's gradients are computed "
+                         "(error feedback absorbs the delay; see "
+                         "docs/tuning.md)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -403,9 +431,10 @@ def main():
     hyper = TrainHyper(lr=args.lr, rank=args.rank, q_chunk=64,
                        warmup_steps=20, remat=False,
                        rank_schedule=args.rank_schedule,
-                       sync_mode=args.sync_mode)
+                       sync_mode=args.sync_mode, staleness=args.staleness)
     compressor = PowerSGDCompressor(
-        rank=args.rank, rank_schedule=args.rank_schedule)
+        rank=args.rank, rank_schedule=args.rank_schedule,
+        pipeline=args.staleness == "one_step")
     step_fn, _, init_state = make_train_step(cfg, m, hyper,
                                              compressor=compressor)
     controller = (compressor.controller()
@@ -435,6 +464,12 @@ def main():
                 f"--rank-schedule {args.rank_schedule!r} does not match the "
                 f"checkpoint's {meta.get('rank_schedule')!r} — resume with "
                 f"the schedule the run was started with")
+        if meta.get("staleness", "none") != args.staleness:
+            raise SystemExit(
+                f"--staleness {args.staleness!r} does not match the "
+                f"checkpoint's {meta.get('staleness', 'none')!r} — the "
+                f"envelope does (not) carry an in-flight aggregate; resume "
+                f"with the mode the run was started with")
         # re-slice stacked model-LOCAL leaves: every model rank gets its
         # own pre-save factors back (not rank-0's copy)
         with jax.set_mesh(m):
@@ -468,7 +503,8 @@ def main():
             model_axis_size=model_size,
             mesh_shape={a: int(m.shape[a]) for a in m.axis_names},
             extra_meta={"rank_schedule": args.rank_schedule,
-                        "arch": args.arch, "last_residual": residual})
+                        "arch": args.arch, "last_residual": residual,
+                        "staleness": args.staleness})
         return path
 
     t0 = time.time()

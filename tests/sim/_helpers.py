@@ -57,7 +57,8 @@ def sim_train(arch="llama3-8b", workers=1, steps=3, batch=8, seq=32,
             new_comp, changed = controller.update(comp_w0, i, residual)
             if changed:
                 ef = EFState(error=ef.error, momentum=ef.momentum,
-                             comp=sim.replicate(new_comp), step=ef.step)
+                             comp=sim.replicate(new_comp), step=ef.step,
+                             inflight=ef.inflight)
         b = shard_fn({k: jnp.asarray(v) for k, v in next(it).items()})
         w = weights_for_step(i) if weights_for_step is not None else None
         params, ef, met = step_fn(params, ef, b, KEY, w)

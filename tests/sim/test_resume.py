@@ -40,13 +40,14 @@ STEPS, CKPT_AT = 8, 4
 LINEARITY_TOL = 5e-5  # f32 reassociation across the worker-mean
 
 
-def build(workers, schedule=None, sync_mode="allreduce"):
+def build(workers, schedule=None, sync_mode="allreduce", staleness="none"):
     """A fresh "process": new compressor, new jitted step, new controller."""
     cfg = get_config("llama3-8b", reduced=True)
     hyper = TrainHyper(q_chunk=32, warmup_steps=5, remat=False,
                        weight_decay=0.0, rank_schedule=schedule,
-                       sync_mode=sync_mode)
-    compressor = PowerSGDCompressor(rank=2, rank_schedule=schedule)
+                       sync_mode=sync_mode, staleness=staleness)
+    compressor = PowerSGDCompressor(rank=2, rank_schedule=schedule,
+                                    pipeline=staleness == "one_step")
     sim = SimMesh(workers)
     step_fn, init_state = make_sim_train_step(cfg, sim, hyper,
                                               compressor=compressor)
@@ -65,7 +66,8 @@ def run(cfg, sim, step_fn, params, ef, controller, start, steps,
             new_comp, changed = controller.update(comp_w0, i, residual)
             if changed:
                 ef = EFState(error=ef.error, momentum=ef.momentum,
-                             comp=sim.replicate(new_comp), step=ef.step)
+                             comp=sim.replicate(new_comp), step=ef.step,
+                             inflight=ef.inflight)
         toks = data.sample(BATCH, SEQ, step=i)
         b = sim.shard({"tokens": jnp.asarray(toks[:, :-1]),
                        "labels": jnp.asarray(toks[:, 1:].copy())})
@@ -84,10 +86,11 @@ def save_at(tmpdir, sim, params, ef, controller=None, schedule=None,
         extra_meta={"rank_schedule": schedule, "last_residual": residual})
 
 
-def restore_into(tmpdir, workers, schedule=None, sync_mode="allreduce"):
+def restore_into(tmpdir, workers, schedule=None, sync_mode="allreduce",
+                 staleness="none"):
     """The resumed process: rebuild from config, restore, re-replicate."""
     cfg, sim, step_fn, init_state, controller = build(workers, schedule,
-                                                      sync_mode)
+                                                      sync_mode, staleness)
     p0, e0 = init_state(KEY)
     template = TrainState(*canonicalize_sim(sim, p0, e0), key=KEY,
                           data_step=jnp.zeros((), jnp.int32))
@@ -235,6 +238,102 @@ def test_elastic_resume_1_to_4(fixed_rank_runs, tmp_path):
 def _fresh_state(workers):
     _, sim, _, init_state, _ = build(workers)
     return init_state(KEY)
+
+
+def test_resume_bit_exact_one_step_mid_pipeline(tmp_path):
+    """ISSUE 8 satellite: a checkpoint taken *mid-pipeline* — a non-zero
+    aggregate parked in ``EFState.inflight`` — must resume bit-exactly.
+    The v2 envelope carries the in-flight buffers like any other state
+    leaf; losing them would silently replay the pipeline bubble and fork
+    the trajectory."""
+    w = 4
+    cfg, sim, step_fn, init_state, _ = build(w, staleness="one_step")
+    params, ef = init_state(KEY)
+    params, ef, ref_losses = run(cfg, sim, step_fn, params, ef, None,
+                                 0, STEPS)
+    ref_params = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
+
+    cfg, sim, step_fn, init_state, _ = build(w, staleness="one_step")
+    params, ef = init_state(KEY)
+    params, ef, head = run(cfg, sim, step_fn, params, ef, None, 0, CKPT_AT)
+    assert head == ref_losses[:CKPT_AT]
+    # mid-pipeline for real: the parked aggregate is non-zero
+    assert any(float(np.max(np.abs(np.asarray(x)))) > 0
+               for x in jax.tree_util.tree_leaves(ef.inflight))
+    save_at(tmp_path, sim, params, ef)
+
+    cfg, sim, step_fn, _, params, ef, meta = restore_into(
+        tmp_path, w, staleness="one_step")
+    # the in-flight records restored structurally — no splice adaptation ran
+    assert "inflight" not in meta, meta
+    params, ef, tail = run(cfg, sim, step_fn, params, ef, None,
+                           CKPT_AT, STEPS)
+    assert tail == ref_losses[CKPT_AT:], (tail, ref_losses[CKPT_AT:])
+    got = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(ref_params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_legacy_envelope_zero_fills_inflight(tmp_path):
+    """Forward-compat splice: a pre-pipeline (v1) envelope has no
+    ``['ef'].inflight`` records at all.  Restoring it into a
+    ``staleness="one_step"`` template must zero-fill the in-flight buffers
+    (one extra pipeline-bubble step, not a failure) and record the
+    adaptation as ``meta["inflight"] == "zero_filled"``."""
+    import msgpack
+    import zlib
+
+    w = 2
+    cfg, sim, step_fn, init_state, _ = build(w)  # synchronous writer
+    params, ef = init_state(KEY)
+    params, ef, _ = run(cfg, sim, step_fn, params, ef, None, 0, CKPT_AT)
+    path = save_at(tmp_path, sim, params, ef)
+
+    # surgery: strip the inflight record(s), recompute the crc, mark v1
+    payload = msgpack.unpackb(open(path, "rb").read(), raw=False)
+    kept = [d for d in payload["leaves"]
+            if not d["path"].startswith("['ef'].inflight")]
+    assert len(kept) < len(payload["leaves"])  # the record existed
+    payload["leaves"] = kept
+    crc = 0
+    for d in kept:
+        if d["kind"] == "array":
+            crc = zlib.crc32(d["data"], crc)
+    payload["crc32"] = crc
+    payload["meta"]["train_state_version"] = 1
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+    cfg, sim, step_fn, _, params, ef, meta = restore_into(
+        tmp_path, w, staleness="one_step")
+    assert meta["inflight"] == "zero_filled", meta
+    for leaf in jax.tree_util.tree_leaves(ef.inflight):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.zeros_like(np.asarray(leaf)))
+    # the continuation trains through the replayed bubble
+    params, ef, tail = run(cfg, sim, step_fn, params, ef, None,
+                           CKPT_AT, CKPT_AT + 2)
+    assert all(np.isfinite(x) for x in tail), tail
+
+
+def test_one_step_envelope_into_sync_template_drops(tmp_path):
+    """The reverse splice: a pipelined envelope restored into a synchronous
+    (``staleness="none"``) template discards the in-flight aggregate and
+    says so — ``meta["inflight"] == "dropped"`` — instead of failing the
+    strict structure check."""
+    w = 2
+    cfg, sim, step_fn, init_state, _ = build(w, staleness="one_step")
+    params, ef = init_state(KEY)
+    params, ef, _ = run(cfg, sim, step_fn, params, ef, None, 0, CKPT_AT)
+    save_at(tmp_path, sim, params, ef)
+
+    cfg, sim, step_fn, _, params, ef, meta = restore_into(tmp_path, w)
+    assert meta["inflight"] == "dropped", meta
+    assert ef.inflight is None
+    params, ef, tail = run(cfg, sim, step_fn, params, ef, None,
+                           CKPT_AT, CKPT_AT + 2)
+    assert all(np.isfinite(x) for x in tail), tail
 
 
 def test_truncated_sim_checkpoint_rejected(tmp_path):

@@ -227,6 +227,89 @@ def test_collective_budget_never_exceeded(name, comp, budget):
 
 
 # ---------------------------------------------------------------------------
+# PipelinedTransport: double-buffered chunk schedule (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_pmean_flat_interleave_bit_identical_same_trace():
+    """interleave=True only reorders the issue/unpack interleaving of the
+    chunk loop — values bit-equal to the serial path, and the
+    CollectiveStats trace (recorded at issue time) identical, so the
+    collective-budget guard cannot silently pass on a reordered schedule."""
+    parts = [jax.random.normal(jax.random.fold_in(KEY, i), (64,))
+             for i in range(5)]
+    s_serial, s_inter = CollectiveStats(), CollectiveStats()
+    # 64 floats = 256 bytes/part; cap forces a multi-chunk schedule
+    out_a = MeshCtx(stats=s_serial).pmean_flat(parts, max_chunk_bytes=512)
+    out_b = MeshCtx(stats=s_inter).pmean_flat(parts, max_chunk_bytes=512,
+                                              interleave=True)
+    assert s_serial.data_collectives >= 2  # the cap actually split
+    for a, b in zip(out_a, out_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (s_serial.kinds, s_serial.sizes, s_serial.itemsizes) == \
+           (s_inter.kinds, s_inter.sizes, s_inter.itemsizes)
+
+
+def test_pipelined_transport_bit_identical_and_budget():
+    """The pipeline=True engine must produce bit-identical compression
+    output AND the identical fused-collective trace as the synchronous
+    transport (same ≤2 budget, same kinds/sizes/itemsizes) — the wire
+    schedule becomes overlappable, the math and the accounting do not
+    change."""
+    for n_layers in (1, 6, 17):
+        grads, specs, shapes = _model_tree(n_layers)
+        sync_c = PowerSGDCompressor(rank=2)
+        pipe_c = PowerSGDCompressor(rank=2, pipeline=True)
+        s_sync, s_pipe = CollectiveStats(), CollectiveStats()
+        out_sync = sync_c.step(grads, sync_c.init(shapes, specs, KEY), specs,
+                               ctx=MeshCtx(stats=s_sync), key=KEY)
+        out_pipe = pipe_c.step(grads, pipe_c.init(shapes, specs, KEY), specs,
+                               ctx=MeshCtx(stats=s_pipe), key=KEY)
+        for a, b in zip(jax.tree_util.tree_leaves(out_sync.agg),
+                        jax.tree_util.tree_leaves(out_pipe.agg)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(out_sync.state),
+                        jax.tree_util.tree_leaves(out_pipe.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert s_pipe.data_collectives <= 2, (n_layers, s_pipe.kinds)
+        assert (s_sync.kinds, s_sync.sizes, s_sync.itemsizes) == \
+               (s_pipe.kinds, s_pipe.sizes, s_pipe.itemsizes), n_layers
+
+
+def test_pipelined_transport_chunked_schedule_stays_on_budget_per_chunk():
+    """With a max_chunk_bytes cap the pipelined engine splits each phase into
+    several in-flight buffers; the per-chunk records must stay identical to
+    the synchronous engine's so comm models price both schedules the same."""
+    grads, specs, shapes = _model_tree(6)
+    kw = dict(rank=2, max_chunk_bytes=1024)
+    sync_c = PowerSGDCompressor(**kw)
+    pipe_c = PowerSGDCompressor(pipeline=True, **kw)
+    s_sync, s_pipe = CollectiveStats(), CollectiveStats()
+    a = sync_c.step(grads, sync_c.init(shapes, specs, KEY), specs,
+                    ctx=MeshCtx(stats=s_sync), key=KEY)
+    b = pipe_c.step(grads, pipe_c.init(shapes, specs, KEY), specs,
+                    ctx=MeshCtx(stats=s_pipe), key=KEY)
+    assert s_sync.data_collectives > 2  # cap split the fused phases
+    assert (s_sync.kinds, s_sync.sizes, s_sync.itemsizes) == \
+           (s_pipe.kinds, s_pipe.sizes, s_pipe.itemsizes)
+    for x, y in zip(jax.tree_util.tree_leaves(a.agg),
+                    jax.tree_util.tree_leaves(b.agg)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_pipelined_transport_shift_rotation():
+    """PipelinedTransport.shift is the cross-step double-buffer rotation:
+    returns (to_apply, new_inflight) = (inflight, fresh); init_inflight
+    seeds the zero bubble."""
+    fresh = {"a": jnp.ones((3,)), "b": jnp.full((2,), 2.0)}
+    inflight = engine.PipelinedTransport.init_inflight(fresh)
+    for leaf in jax.tree_util.tree_leaves(inflight):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.zeros_like(np.asarray(leaf)))
+    applied, parked = engine.PipelinedTransport.shift(fresh, inflight)
+    assert applied is inflight and parked is fresh
+
+
+# ---------------------------------------------------------------------------
 # sync_mode="broadcast": semantics, byte accounting and collective budgets
 # ---------------------------------------------------------------------------
 

@@ -468,12 +468,15 @@ def comm_time_from_stats(stats, workers: int,
     the only part that lengthens the critical path.
     """
     total = 0.0
-    for size, itemsize, kind in zip(stats.sizes, stats.itemsizes, stats.kinds):
+    overheads = list(getattr(stats, "overheads", ()) or ())
+    overheads += [0] * (len(stats.sizes) - len(overheads))
+    for size, itemsize, kind, overhead in zip(stats.sizes, stats.itemsizes,
+                                              stats.kinds, overheads):
+        nbytes = size * itemsize + overhead  # fractional int4 + scale sidecar
         if kind == "broadcast":
-            total += broadcast_time(size * itemsize, workers, backend)
+            total += broadcast_time(nbytes, workers, backend)
         else:
-            total += comm_time(size * itemsize, workers, kind == "reduce",
-                               backend)
+            total += comm_time(nbytes, workers, kind == "reduce", backend)
     return max(0.0, total - overlap_compute_s)
 
 

@@ -372,6 +372,14 @@ def zoo_transport_profile(params, specs, workers: int = 16) -> list:
     table that shows the paper's §3 argument end-to-end: linear schemes ride
     O(1) flat all-reduces whose cost is flat in W; non-linear schemes pay a
     genuine W-scaled all-gather.
+
+    ISSUE 9 arm: the same trace under quantized wire policies.  For each
+    ``wire_dtype`` in float32 / int8 / int4 the byte sums include the
+    fractional int4 itemsize and the per-slot f32 scale sidecar
+    (``CollectiveStats.overheads``), and the powersgd rows carry a measured
+    SimMesh final loss so the bytes-vs-quality trade is pinned by data, not
+    asserted: int4 moves ≥4x fewer wire bytes than float32 at a final loss
+    within the tolerance tests/test_docs.py pins from this JSON.
     """
     from benchmarks.common import comm_time_from_stats
     from repro.core.compressors import make_compressor
@@ -385,18 +393,24 @@ def zoo_transport_profile(params, specs, workers: int = 16) -> list:
         lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
     grads = jax.tree_util.tree_map(
         lambda p: jnp.ones_like(p) * 0.01, params)
-    rows = []
-    for name in zoo:
-        comp = make_compressor(name, rank=2)
+
+    def trace_row(name: str, wire_dtype: str) -> dict:
+        kw = {} if wire_dtype == "auto" else {"wire_dtype": wire_dtype}
+        comp = make_compressor(name, rank=2, **kw)
         stats = CollectiveStats()
         out = comp.step(grads, comp.init(shapes, specs, key), specs,
                         ctx=MeshCtx(stats=stats), key=key)
-        reduce_b = sum(s * i for s, i, k in zip(stats.sizes, stats.itemsizes,
-                                                stats.kinds) if k == "reduce")
-        gather_b = sum(s * i for s, i, k in zip(stats.sizes, stats.itemsizes,
-                                                stats.kinds) if k == "gather")
-        rows.append({
+        overheads = list(getattr(stats, "overheads", ()) or ())
+        overheads += [0] * (len(stats.sizes) - len(overheads))
+        reduce_b = sum(s * i + o for s, i, k, o in
+                       zip(stats.sizes, stats.itemsizes, stats.kinds,
+                           overheads) if k == "reduce")
+        gather_b = sum(s * i + o for s, i, k, o in
+                       zip(stats.sizes, stats.itemsizes, stats.kinds,
+                           overheads) if k == "gather")
+        return {
             "algorithm": name,
+            "wire_dtype": wire_dtype,
             "wire_mode": getattr(comp, "wire_mode", "reduce"),
             "collectives_per_step": stats.data_collectives,
             "reduce_collectives": stats.reduce_collectives,
@@ -407,8 +421,56 @@ def zoo_transport_profile(params, specs, workers: int = 16) -> list:
             "payload_bits_per_worker": int(out.bits_per_worker),
             "modeled_comm_ms_w%d" % workers:
                 round(comm_time_from_stats(stats, workers) * 1e3, 3),
-        })
+        }
+
+    rows = [trace_row(name, "auto") for name in zoo]
+
+    # Quantized-wire arm: the acceptance scheme (powersgd) plus one gather
+    # scheme per combine path, traced under every wire policy.  float32 is
+    # the explicit baseline the compression ratios are quoted against.
+    quant_zoo = ("powersgd", "sign_norm", "top_k")
+    loss_steps = 60
+    for name in quant_zoo:
+        base_kb = None
+        for wd in ("float32", "int8", "int4"):
+            row = trace_row(name, wd)
+            wire_kb = (row["reduce_kb_per_step"]
+                       + row["gather_kb_per_step_w%d" % workers])
+            if wd == "float32":
+                base_kb = wire_kb
+            row["wire_bytes_ratio_vs_float32"] = round(base_kb / wire_kb, 2)
+            if name == "powersgd":
+                losses = _wire_loss_run(wd, workers=4, steps=loss_steps)
+                row["loss_workers"] = 4
+                row["loss_steps"] = loss_steps
+                row["final5_loss"] = round(float(np.mean(losses[-5:])), 4)
+            rows.append(row)
     return rows
+
+
+def _wire_loss_run(wire_dtype: str, workers: int, steps: int) -> list:
+    """Per-step aggregated lm_loss for the production sim train step under
+    ``wire_dtype`` — the measured arm of :func:`zoo_transport_profile`."""
+    from repro.configs.base import get_config
+    from repro.core.simmesh import SimMesh
+    from repro.data.synthetic import MarkovLM
+    from repro.launch.train import TrainHyper, make_sim_train_step
+
+    cfg = get_config("llama3-8b", reduced=True)
+    hyper = TrainHyper(lr=0.05, q_chunk=32, warmup_steps=5, remat=False,
+                       wire_dtype=wire_dtype)
+    sim = SimMesh(workers)
+    step_fn, init_state = make_sim_train_step(cfg, sim, hyper)
+    data = MarkovLM(vocab=cfg.vocab_size, seed=0, order=1, clusters=8)
+    it = data.batches(8, 64)
+    key = jax.random.key(0)
+    params, ef = init_state(key)
+    losses = []
+    for i in range(steps):
+        b = sim.shard({k: jnp.asarray(v) for k, v in next(it).items()})
+        params, ef, met = step_fn(params, ef, b, key)
+        losses.append(float(met["lm_loss"][0]))
+    return losses
 
 
 _SYNC_MEASURE_SRC = '''

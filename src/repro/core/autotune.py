@@ -63,6 +63,16 @@ _BACKENDS = {
     "gloo_10gbit": (150e-6, 2.5e9 / 8),
 }
 
+# How many budget bits one payload float costs under each wire dtype.
+# float32/bfloat16 both charge 32: the bits budget keeps the paper's
+# float-accounting convention and the bf16 cast is a free precision/wire
+# win on top (legacy behavior).  The quantized dtypes genuinely re-price
+# the budget — the same bits afford 4×/8× the payload floats, which is
+# exactly the rank-vs-precision trade the tuner arbitrates.
+_WIRE_BUDGET_BITS = {"float32": 32, "bfloat16": 32, "int8": 8, "int4": 4}
+# Honest bytes one payload element occupies on the wire (α-β pricing).
+_WIRE_ITEMSIZE = {"float32": 4.0, "bfloat16": 2.0, "int8": 1.0, "int4": 0.5}
+
 
 @dataclasses.dataclass(frozen=True)
 class HardwareModel:
@@ -123,9 +133,11 @@ def comm_time_from_stats(stats, workers: int, hw: HardwareModel, *,
     critical path.  The default 0.0 is the synchronous schedule (all comm
     exposed), so existing call sites are unchanged."""
     total = 0.0
-    for size, itemsize, kind in zip(stats.sizes, stats.itemsizes,
-                                    stats.kinds):
-        total += hw.collective_time(size * itemsize, workers, kind)
+    overheads = list(getattr(stats, "overheads", ()) or ())
+    overheads += [0] * (len(stats.sizes) - len(overheads))
+    for size, itemsize, kind, overhead in zip(stats.sizes, stats.itemsizes,
+                                              stats.kinds, overheads):
+        total += hw.collective_time(size * itemsize + overhead, workers, kind)
     return max(0.0, total - overlap_compute_s)
 
 
@@ -162,6 +174,8 @@ class TunePlan:
     uncompressed_floats: int   # vector leaves riding the first reduce
     bits_per_step: int         # (payload + uncompressed) × 32 — the paper's
     #                            Tables 3/10/11 accounting convention
+    wire_bits_per_step: int    # honest on-the-wire bits: payload at the wire
+    #                            dtype's real width (16/8/4) + scale sidecars
     predicted_comm_s: float    # α-β modeled gradient exchange per step
     workers: int
     leaf_ranks: Tuple[Optional[int], ...]  # per planner leaf, tree order
@@ -189,19 +203,22 @@ def _collect(shapes, specs):
     return leaves
 
 
-def _phase_time(wire_floats: Sequence[int], unc_floats: int, itemsize: int,
+def _phase_time(wire_floats: Sequence[int], unc_floats: int, itemsize: float,
                 workers: int, hw: HardwareModel,
-                max_chunk_bytes: Optional[int]) -> float:
+                max_chunk_bytes: Optional[int],
+                overhead_bytes: float = 0.0) -> float:
     """Modeled time of the two fused reduce phases of one PowerSGD step.
 
     Phase 1 carries every bucket's P slab (n-side factors) plus the
     uncompressed leaves; phase 2 the Q slabs (m-side).  Factors split
     r·(n+m) as r·n / r·m; modeling each phase at half the total is exact
-    in aggregate and keeps the tuner independent of the n/m split."""
+    in aggregate and keeps the tuner independent of the n/m split.
+    ``overhead_bytes`` is the per-step sidecar cost (quantization scales),
+    split evenly over the two phases."""
     total = 0.0
     for phase_floats in (sum(wire_floats) / 2 + unc_floats,
                          sum(wire_floats) / 2):
-        nbytes = phase_floats * itemsize
+        nbytes = phase_floats * itemsize + overhead_bytes / 2
         chunks = (1 if not max_chunk_bytes
                   else max(1, math.ceil(nbytes / max_chunk_bytes)))
         per_chunk = nbytes / chunks
@@ -220,12 +237,16 @@ def autotune(shapes, specs, *, bits_budget: int, workers: int,
              overlap_compute_s: float = 0.0) -> TunePlan:
     """Select per-bucket ``rank`` + global ``(wire_dtype, max_chunk_bytes)``.
 
-    ``bits_budget`` bounds the *payload* bits per step per worker (the
-    paper's accounting: 32 bits per compressed float plus the uncompressed
-    vector leaves, which are a fixed cost the tuner cannot reduce).  The
-    rank assignment is a greedy walk-down (module docstring); the wire
-    policy then minimizes the α-β modeled exchange time over the candidate
-    dtypes/chunk caps.  ``bucket_residuals`` (ordered like the bucket plan,
+    ``bits_budget`` bounds the *payload* bits per step per worker.  Under
+    the float wire dtypes this is the paper's accounting (32 bits per
+    compressed float plus the uncompressed vector leaves, a fixed cost the
+    tuner cannot reduce; the bfloat16 cast is a free win on top).  The
+    quantized wire dtypes re-price the budget at their real width
+    (``_WIRE_BUDGET_BITS``: 8 for int8, 4 for int4), so one budget can be
+    spent on rank *or* precision: the tuner runs the greedy rank walk-down
+    (module docstring) once per wire candidate and keeps the candidate
+    retaining the most payload floats, tie-broken by the α-β modeled
+    exchange time over the chunk-cap options.  ``bucket_residuals`` (ordered like the bucket plan,
     e.g. from a ``track_residual=True`` probe step) steers the walk-down
     toward buckets whose subspace already covers their gradients.
 
@@ -279,54 +300,74 @@ def autotune(shapes, specs, *, bits_budget: int, workers: int,
         """Largest candidate ≤ cap (index 0 if even ranks[0] exceeds it)."""
         return max([i for i, r in enumerate(ranks) if r <= cap] or [0])
 
-    cur = {b: top_index(rank_cap[b]) for b in range(len(plan.buckets))}
-
-    def payload_floats() -> int:
+    def payload_floats(cur) -> int:
         return sum(pay_unit[b] * ranks[i] for b, i in cur.items())
 
-    budget_floats = max(0, bits_budget // 32 - unc_floats)
-    while payload_floats() > budget_floats:
-        best, best_score = None, None
-        for b, i in cur.items():
-            if i == 0:
-                continue
-            saved = pay_unit[b] * (ranks[i] - ranks[i - 1])
-            loss = (ranks[i] - ranks[i - 1]) / max(min_nm[b], 1) * elems[b]
-            if bucket_residuals is not None:
-                # low measured residual ⇒ subspace over-covers ⇒ cheap cut
-                loss *= max(float(bucket_residuals[b]), 1e-3)
-            score = saved / max(loss, 1e-12)
-            if best_score is None or score > best_score:
-                best, best_score = b, score
-        if best is None:
-            break  # every bucket at min rank: budget is simply infeasible
-        cur[best] -= 1
+    def walk_down(budget_floats: int) -> dict:
+        """Start every bucket at its top candidate rank and greedily shrink
+        the best bits-saved-per-quality-loss bucket until the budget holds."""
+        cur = {b: top_index(rank_cap[b]) for b in range(len(plan.buckets))}
+        while payload_floats(cur) > budget_floats:
+            best, best_score = None, None
+            for b, i in cur.items():
+                if i == 0:
+                    continue
+                saved = pay_unit[b] * (ranks[i] - ranks[i - 1])
+                loss = (ranks[i] - ranks[i - 1]) / max(min_nm[b], 1) * elems[b]
+                if bucket_residuals is not None:
+                    # low measured residual ⇒ subspace over-covers ⇒ cheap cut
+                    loss *= max(float(bucket_residuals[b]), 1e-3)
+                score = saved / max(loss, 1e-12)
+                if best_score is None or score > best_score:
+                    best, best_score = b, score
+            if best is None:
+                break  # every bucket at min rank: budget is simply infeasible
+            cur[best] -= 1
+        return cur
 
+    # --- joint (rank, wire) selection under ONE bits budget ---------------
+    # Each wire candidate re-prices the budget (_WIRE_BUDGET_BITS): a
+    # quantized wire affords 4×/8× the payload floats, so its walk-down
+    # stops at higher ranks.  Keep the candidate that retains the most
+    # payload floats (tracked directions are the quality currency); break
+    # ties — float32 vs bfloat16 always tie, same budget — by the α-β
+    # modeled exchange time, then by candidate order.
+    n_unc_leaves = sum(1 for ps in plan_shapes if ps is None)
+    best_cfg = best_cur = best_time = best_pay = None
+    for wd in wire_dtypes:
+        if wd not in matrixize.WIRE_DTYPES or wd == "auto":
+            raise ValueError(
+                f"wire_dtype candidate {wd!r} must be an explicit dtype "
+                f"(one of {[d for d in matrixize.WIRE_DTYPES if d != 'auto']})")
+        budget_floats = max(
+            0, bits_budget // _WIRE_BUDGET_BITS[wd] - unc_floats)
+        cur = walk_down(budget_floats)
+        pay = payload_floats(cur)
+        wire_floats = [wire_unit[b] * ranks[i] for b, i in cur.items()]
+        quant = wd in matrixize.QUANT_WIRE_DTYPES
+        # scale sidecar: one f32 per quantized slot — each bucket ships a P
+        # and a Q slab per step, and every uncompressed leaf rides phase 1
+        overhead = (matrixize.SCALE_BYTES
+                    * (2 * len(plan.buckets) + n_unc_leaves) if quant else 0)
+        for mcb in max_chunk_bytes_options:
+            t = _phase_time(wire_floats, unc_floats, _WIRE_ITEMSIZE[wd],
+                            workers, hw, mcb, overhead_bytes=overhead)
+            # Pipelined (one-step-stale) schedules hide comm behind the
+            # step's compute; price candidates by *exposed* time so the
+            # tuner stops shrinking the wire once comm fits under compute
+            # and spends the bit budget on rank instead.
+            t = max(0.0, t - overlap_compute_s)
+            if (best_pay is None or pay > best_pay
+                    or (pay == best_pay and t < best_time)):
+                best_cfg, best_cur, best_time, best_pay = (wd, mcb), cur, t, pay
+
+    cur = best_cur
     decisions = tuple(
         BucketDecision(
             bucket=b, n=bk.n, m=bk.m, count=bk.count, rank=ranks[cur[b]],
             payload_floats=pay_unit[b] * ranks[cur[b]],
             wire_floats=wire_unit[b] * ranks[cur[b]])
         for b, bk in enumerate(plan.buckets))
-
-    # --- wire policy: cheapest α-β candidate over the whole plan ----------
-    best_cfg, best_time = None, None
-    for wd in wire_dtypes:
-        if wd not in matrixize.WIRE_DTYPES or wd == "auto":
-            raise ValueError(
-                f"wire_dtype candidate {wd!r} must be an explicit dtype "
-                f"(one of {[d for d in matrixize.WIRE_DTYPES if d != 'auto']})")
-        itemsize = 2 if wd == "bfloat16" else 4
-        for mcb in max_chunk_bytes_options:
-            t = _phase_time([d.wire_floats for d in decisions], unc_floats,
-                            itemsize, workers, hw, mcb)
-            # Pipelined (one-step-stale) schedules hide comm behind the
-            # step's compute; price candidates by *exposed* time so the
-            # tuner stops shrinking the wire once comm fits under compute
-            # and spends the bit budget on rank instead.
-            t = max(0.0, t - overlap_compute_s)
-            if best_time is None or t < best_time:
-                best_cfg, best_time = (wd, mcb), t
 
     # per-leaf ranks, planner order (None = uncompressed leaf)
     leaf_ranks: List[Optional[int]] = []
@@ -338,11 +379,17 @@ def autotune(shapes, specs, *, bits_budget: int, workers: int,
             leaf_ranks.append(decisions[b_id].rank)
 
     pay = sum(d.payload_floats for d in decisions)
+    wd = best_cfg[0]
+    wire_bits_per_step = int((pay + unc_floats) * _WIRE_ITEMSIZE[wd] * 8)
+    if wd in matrixize.QUANT_WIRE_DTYPES:
+        wire_bits_per_step += 8 * matrixize.SCALE_BYTES * (
+            2 * len(plan.buckets) + n_unc_leaves)
     return TunePlan(
-        decisions=decisions, wire_dtype=best_cfg[0],
+        decisions=decisions, wire_dtype=wd,
         max_chunk_bytes=best_cfg[1], tolerance=tolerance,
         payload_floats=pay, uncompressed_floats=unc_floats,
         bits_per_step=(pay + unc_floats) * 32,
+        wire_bits_per_step=wire_bits_per_step,
         predicted_comm_s=best_time, workers=workers,
         leaf_ranks=tuple(leaf_ranks))
 

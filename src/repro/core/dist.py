@@ -118,27 +118,32 @@ class CollectiveStats:
       ``fanout=1``.
 
     ``itemsizes`` records the *actual* wire itemsize of each buffer (e.g. 2
-    for a bfloat16 chunk, 1 for int8 sign payloads) — not a blanket float32
-    assumption — so ``bytes_per_collective`` is honest about both the wire
-    dtype and the reduce-vs-gather scaling.
+    for a bfloat16 chunk, 1 for int8 sign payloads, fractional 0.5 for
+    nibble-packed int4) — not a blanket float32 assumption — and
+    ``overheads`` the per-collective sidecar bytes (the float32 scale per
+    quantized slot), so ``bytes_per_collective`` is honest about the wire
+    dtype, sub-byte packing, sidecars and the reduce-vs-gather scaling.
     """
 
     data_collectives: int = 0
     data_floats: int = 0
     sizes: List[int] = dataclasses.field(default_factory=list)
-    itemsizes: List[int] = dataclasses.field(default_factory=list)
+    itemsizes: List[float] = dataclasses.field(default_factory=list)
     kinds: List[str] = dataclasses.field(default_factory=list)
     fanouts: List[int] = dataclasses.field(default_factory=list)
+    overheads: List[int] = dataclasses.field(default_factory=list)
 
-    def record(self, n_elems: int, itemsize: int = 4, kind: str = "reduce",
-               fanout: int = 1) -> None:
+    def record(self, n_elems: int, itemsize: float = 4, kind: str = "reduce",
+               fanout: int = 1, overhead: int = 0) -> None:
         assert kind in ("reduce", "gather", "broadcast"), kind
         self.data_collectives += 1
         self.data_floats += int(n_elems)
         self.sizes.append(int(n_elems))
-        self.itemsizes.append(int(itemsize))
+        i = float(itemsize)
+        self.itemsizes.append(int(i) if i.is_integer() else i)
         self.kinds.append(kind)
         self.fanouts.append(int(fanout))
+        self.overheads.append(int(overhead))
 
     def reset(self) -> None:
         self.data_collectives = 0
@@ -147,6 +152,7 @@ class CollectiveStats:
         self.itemsizes.clear()
         self.kinds.clear()
         self.fanouts.clear()
+        self.overheads.clear()
 
     @property
     def reduce_collectives(self) -> int:
@@ -160,17 +166,22 @@ class CollectiveStats:
     def broadcast_collectives(self) -> int:
         return sum(1 for k in self.kinds if k == "broadcast")
 
-    def bytes_per_collective(self) -> List[int]:
-        """Wire bytes per collective, using each buffer's recorded dtype.
+    def bytes_per_collective(self) -> List[float]:
+        """Wire bytes per collective: ``size·itemsize + overhead``, using
+        each buffer's recorded (possibly fractional) itemsize and its scale
+        sidecar.  Integral entries come back as ints.
 
         Gather-pattern entries are scaled by their fanout (the data-parallel
         world size W): each worker receives every other worker's payload, so
         the bytes crossing a worker's NIC are W× the per-worker payload —
         the cost the paper's all-reduce argument avoids.
         """
-        return [s * i * (f if k == "gather" else 1)
-                for s, i, k, f in zip(self.sizes, self.itemsizes,
-                                      self.kinds, self.fanouts)]
+        out = []
+        for s, i, k, f, o in zip(self.sizes, self.itemsizes, self.kinds,
+                                 self.fanouts, self.overheads):
+            b = (s * i + o) * (f if k == "gather" else 1)
+            out.append(int(b) if float(b).is_integer() else b)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -408,6 +419,15 @@ class MeshCtx:
                 x.size, jnp.dtype(x.dtype).itemsize, kind=kind,
                 fanout=self.data_size() if kind == "gather" else 1)
 
+    def _record_chunk(self, chunk, kind: str = "reduce") -> None:
+        """Record a quantized wire chunk at its honest cost: fractional
+        itemsize (0.5 for int4) plus the scale-sidecar overhead bytes."""
+        if self.stats is not None:
+            self.stats.record(
+                chunk.size, chunk.wire_itemsize, kind=kind,
+                fanout=self.data_size() if kind == "gather" else 1,
+                overhead=chunk.overhead_bytes)
+
     @property
     def _synced(self) -> bool:
         return self.sync_mode == "broadcast" and bool(self.data_axes)
@@ -490,6 +510,15 @@ class MeshCtx:
         — for multi-phase transports (PowerSGD's P/Q reduces) that issue
         one fused end-of-step :meth:`broadcast_flat` instead.
 
+        ``wire_dtype="int8"``/``"int4"`` quantize each float chunk slot
+        symmetrically before the reduce (integer parts keep their own
+        chunks): values are snapped to the wire grid locally and the mean is
+        taken over the dequantized float32 buffer — a widened accumulator,
+        so the collective stays a plain all-reduce and error feedback sees
+        the quantization error.  Stats record the honest quantized wire cost
+        (1 byte/elem for int8, 0.5 for nibble-packed int4, + one float32
+        scale per slot).
+
         ``interleave=True`` emits the double-buffered schedule instead of
         the serial one: the reduce for chunk b is issued *before* chunk b−1
         is unpacked, so no chunk's decompression sits between consecutive
@@ -509,8 +538,17 @@ class MeshCtx:
                                    max_chunk_bytes=max_chunk_bytes)
 
         def issue(chunk):
-            buf = matrixize.pack_flat(chunk, parts)
-            self._record_data(buf)
+            if chunk.quant is not None:
+                # quantize-before-reduce, widened accumulator: each worker
+                # contributes exactly its wire-representable (dequantized)
+                # values and the mean is taken in float32, so the transport
+                # stays a plain all-reduce.  Recorded at the honest quantized
+                # wire cost (fractional itemsize + scale sidecar).
+                buf = matrixize.quant_dequant_flat(chunk, parts)
+                self._record_chunk(chunk, "reduce")
+            else:
+                buf = matrixize.pack_flat(chunk, parts)
+                self._record_data(buf)
             if self._synced:
                 if sync is not False:
                     self._record_data(buf, kind="broadcast")
@@ -544,9 +582,15 @@ class MeshCtx:
         unweighted psum (:meth:`CollectiveBackend.broadcast0`).  Recorded
         with ``kind="broadcast"``, bytes flat in W.  Outside any data axis
         (and on already replica-identical inputs) this is the identity.
+
+        Quantized wire dtypes remap to ``"auto"`` here: the broadcast is a
+        replica *sync* and must deliver rank 0's exact bits — lossy
+        requantization of already-synced state would defeat its purpose.
         """
         from repro.core import matrixize
 
+        if wire_dtype in matrixize.QUANT_WIRE_DTYPES:
+            wire_dtype = "auto"
         parts = list(parts)
         if not parts:
             return []
@@ -591,6 +635,24 @@ class MeshCtx:
         w = self.data_size()
         out: dict = {}
         for chunk in plan.chunks:
+            if chunk.quant is not None:
+                # quantize-before-gather: the real integer payload crosses
+                # the wire (nibble-packed for int4) with its per-slot scale
+                # sidecar; every worker dequantizes all W payloads after the
+                # gather.  One logical collective per chunk — the sidecar
+                # rides it, counted as overhead bytes, not a new collective.
+                payload, scales = matrixize.quant_pack_flat(chunk, parts)
+                self._record_chunk(chunk, "gather")
+                if self.data_axes:
+                    payload = self.backend.all_gather(
+                        payload, self.data_axes, gather_axis=0, tiled=False)
+                    scales = self.backend.all_gather(
+                        scales, self.data_axes, gather_axis=0, tiled=False)
+                else:
+                    payload, scales = payload[None], scales[None]
+                out.update(matrixize.quant_unpack_flat(
+                    chunk, payload, scales, leading=(w,)))
+                continue
             buf = matrixize.pack_flat(chunk, parts)
             self._record_data(buf, kind="gather")
             if self.data_axes:

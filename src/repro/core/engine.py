@@ -158,7 +158,8 @@ class Transport:
     """Fused data-axis transport bound to a context and a wire policy."""
 
     ctx: MeshCtx = SINGLE
-    wire_dtype: str = "auto"            # "auto" | "float32" | "bfloat16"
+    wire_dtype: str = "auto"            # matrixize.WIRE_DTYPES ("auto" |
+    #                                     float/bfloat16 cast | int8/int4 quant)
     max_chunk_bytes: Optional[int] = None
 
     def reduce_mean(self, parts: Sequence[jax.Array],

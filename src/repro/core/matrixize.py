@@ -240,13 +240,23 @@ def unpack_entry(stacked: jax.Array, entry: BucketEntry,
 #   straggler silently upcast an entire bfloat16 payload on the wire.
 # * ``wire_dtype="float32"|"bfloat16"`` — every part is cast to that dtype
 #   for transport (and cast back on unpack), one shared chunk.
+# * ``wire_dtype="int8"|"int4"`` — float parts are symmetrically quantized
+#   per slot (scale = max|x|/qmax, a float32 scale sidecar per slot) and
+#   share one integer chunk; int4 additionally nibble-packs two codes per
+#   uint8 byte (``repro.kernels`` pack/unpack).  Integer parts (top-k
+#   indices, sign bytes) are never quantized — they keep their own dtype
+#   in auto-style chunks, exactly like under ``"auto"``.
 # * ``max_chunk_bytes`` — optional cap; a chunk is split once its wire size
 #   would exceed the cap (a part never spans two chunks).
 #
 # Planning is pure Python over static shapes/dtypes — trace-time only.
 
 
-WIRE_DTYPES = ("auto", "float32", "bfloat16")
+WIRE_DTYPES = ("auto", "float32", "bfloat16", "int8", "int4")
+QUANT_WIRE_DTYPES = ("int8", "int4")
+QUANT_QMAX = {"int8": 127, "int4": 7}
+_QUANT_ITEMSIZE = {"int8": 1.0, "int4": 0.5}   # wire bytes per element
+SCALE_BYTES = 4                                # one f32 scale per quant slot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,18 +272,39 @@ class FlatSlot:
 
 @dataclasses.dataclass(frozen=True)
 class FlatChunk:
-    """One contiguous wire buffer: same wire dtype, issued as one collective."""
+    """One contiguous wire buffer: same wire dtype, issued as one collective.
+
+    ``quant`` marks a quantized payload chunk (``"int8"``/``"int4"``):
+    ``wire_dtype`` is then the *storage* dtype of the shipped codes (int8,
+    or uint8 for nibble-packed int4) and every slot carries a float32
+    symmetric scale in a sidecar that rides the same collective."""
 
     wire_dtype: "jnp.dtype"
     slots: Tuple[FlatSlot, ...]
+    quant: Optional[str] = None
 
     @property
     def size(self) -> int:
         return sum(s.size for s in self.slots)
 
     @property
-    def wire_bytes(self) -> int:
-        return self.size * jnp.dtype(self.wire_dtype).itemsize
+    def wire_itemsize(self) -> float:
+        """Bytes ONE element costs on the wire — fractional for int4."""
+        if self.quant is not None:
+            return _QUANT_ITEMSIZE[self.quant]
+        return float(jnp.dtype(self.wire_dtype).itemsize)
+
+    @property
+    def overhead_bytes(self) -> int:
+        """Scale-sidecar bytes (zero for unquantized chunks)."""
+        return SCALE_BYTES * len(self.slots) if self.quant is not None else 0
+
+    @property
+    def wire_bytes(self):
+        """Honest wire bytes: payload at ``wire_itemsize`` + scale sidecar.
+        An int (the common case) or a float for odd-size int4 payloads."""
+        b = self.size * self.wire_itemsize + self.overhead_bytes
+        return int(b) if float(b).is_integer() else b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -281,8 +312,9 @@ class FlatPlan:
     chunks: Tuple[FlatChunk, ...]
 
     @property
-    def total_wire_bytes(self) -> int:
-        return sum(c.wire_bytes for c in self.chunks)
+    def total_wire_bytes(self):
+        b = sum(c.wire_bytes for c in self.chunks)
+        return int(b) if float(b).is_integer() else b
 
 
 def plan_flat(parts, wire_dtype: str = "auto",
@@ -297,32 +329,51 @@ def plan_flat(parts, wire_dtype: str = "auto",
     if wire_dtype not in WIRE_DTYPES:
         raise ValueError(
             f"unknown wire_dtype {wire_dtype!r}; use one of {WIRE_DTYPES}")
-    cast = None if wire_dtype == "auto" else jnp.dtype(wire_dtype)
-    chunks: list = []          # [wire_dtype, offset, [FlatSlot]]
-    by_dtype: dict = {}        # wire dtype -> open chunk (last of its dtype)
+    quant = wire_dtype if wire_dtype in QUANT_WIRE_DTYPES else None
+    cast = (None if (wire_dtype == "auto" or quant is not None)
+            else jnp.dtype(wire_dtype))
+    chunks: list = []          # [wire_dtype, offset, [FlatSlot], quant_label]
+    by_key: dict = {}          # chunk key -> open chunk (last of its key)
     for i, p in enumerate(parts):
-        wd = cast if cast is not None else jnp.dtype(p.dtype)
+        if quant is not None and jnp.issubdtype(jnp.dtype(p.dtype),
+                                                jnp.floating):
+            # float payloads share one quantized chunk; storage dtype is the
+            # shipped code array: int8 codes, or packed nibbles for int4.
+            wd = jnp.dtype(jnp.int8 if quant == "int8" else jnp.uint8)
+            key: object = quant
+            label = quant
+            itemsize: float = _QUANT_ITEMSIZE[quant]
+        else:
+            # integer parts (top-k indices, sign bytes) are never quantized
+            wd = cast if cast is not None else jnp.dtype(p.dtype)
+            key = wd
+            label = None
+            itemsize = float(wd.itemsize)
         size = math.prod(p.shape) if p.shape else 1
-        open_chunk = by_dtype.get(wd)
+        open_chunk = by_key.get(key)
         if open_chunk is not None and max_chunk_bytes is not None:
-            if (open_chunk[1] + size) * wd.itemsize > max_chunk_bytes:
+            if (open_chunk[1] + size) * itemsize > max_chunk_bytes:
                 open_chunk = None  # cap reached: start a fresh chunk
         if open_chunk is None:
-            open_chunk = [wd, 0, []]
+            open_chunk = [wd, 0, [], label]
             chunks.append(open_chunk)
-            by_dtype[wd] = open_chunk
+            by_key[key] = open_chunk
         open_chunk[2].append(FlatSlot(
             index=i, offset=open_chunk[1], size=size,
             shape=tuple(p.shape), dtype=jnp.dtype(p.dtype)))
         open_chunk[1] += size
     return FlatPlan(chunks=tuple(
-        FlatChunk(wire_dtype=wd, slots=tuple(slots))
-        for wd, _, slots in chunks))
+        FlatChunk(wire_dtype=wd, slots=tuple(slots), quant=label)
+        for wd, _, slots, label in chunks))
 
 
 def pack_flat(chunk: FlatChunk, parts) -> jax.Array:
     """Concatenate the chunk's slots (indexable ``parts``) into its 1-D wire
     buffer, casting to the wire dtype."""
+    if chunk.quant is not None:
+        raise ValueError(
+            "pack_flat on a quantized chunk — use quant_pack_flat / "
+            "quant_dequant_flat (the payload needs its scale sidecar)")
     flats = [jnp.ravel(parts[s.index]).astype(chunk.wire_dtype)
              for s in chunk.slots]
     return flats[0] if len(flats) == 1 else jnp.concatenate(flats)
@@ -336,6 +387,100 @@ def unpack_flat(chunk: FlatChunk, buf: jax.Array, leading=()) -> dict:
         x = jax.lax.slice_in_dim(buf, s.offset, s.offset + s.size, axis=-1)
         out[s.index] = x.reshape(tuple(leading) + s.shape).astype(s.dtype)
     return out
+
+
+# ---------------------------------------------------------------------------
+# quantized payload chunks (wire_dtype="int8"/"int4", ISSUE 9)
+#
+# Each slot is quantized symmetrically on its own: scale = max|x|/qmax, codes
+# = clip(round(x/scale)).  The float32 scales ride the same collective as a
+# sidecar (SCALE_BYTES per slot in the byte accounting).  Two combine modes:
+#
+# * reduce path (all-reduce schemes): quantize → dequantize locally, then
+#   reduce the dequantized float32 buffer — the "widened accumulator": every
+#   worker contributes exactly its wire-representable values, the mean is
+#   taken at full precision, and the transport stays a plain all-reduce.
+# * gather path (schemes that already all-gather): ship the real integer
+#   payload (nibble-packed for int4) plus per-slot scales and dequantize
+#   per-worker after the gather.
+# ---------------------------------------------------------------------------
+
+
+def _nibble_pack(q):
+    # 1-D codes (the per-worker pack path) go through the ops dispatcher so
+    # accelerators hit the Pallas kernel; leading-dim arrays (post-gather
+    # unpack sees (W, bytes)) use the vmap-safe reference directly.
+    from repro.kernels import ops as _kops
+    from repro.kernels import ref as _kref
+    return _kops.nibble_pack(q) if q.ndim == 1 else _kref.nibble_pack(q)
+
+
+def _nibble_unpack(packed, n):
+    from repro.kernels import ops as _kops
+    from repro.kernels import ref as _kref
+    if packed.ndim == 1:
+        return _kops.nibble_unpack(packed, n)
+    return _kref.nibble_unpack(packed, n)
+
+
+def quant_slot_sizes(chunk: FlatChunk):
+    """Per-slot payload lengths in the shipped code buffer: ceil(size/2)
+    bytes for int4 (each slot padded to its own even length so slot
+    boundaries stay byte-aligned), size for int8."""
+    if chunk.quant == "int4":
+        return [(s.size + 1) // 2 for s in chunk.slots]
+    return [s.size for s in chunk.slots]
+
+
+def quant_pack_flat(chunk: FlatChunk, parts):
+    """Quantize + pack a quantized chunk → ``(payload, scales)``.
+
+    ``payload`` is the 1-D shipped code buffer (int8 codes, or uint8
+    nibble-packed for int4, each slot padded to an even code count);
+    ``scales`` is the float32 per-slot scale sidecar, shape (n_slots,)."""
+    from repro.kernels import ref as _kref
+    qmax = QUANT_QMAX[chunk.quant]
+    codes, scales = [], []
+    for s in chunk.slots:
+        x = jnp.ravel(parts[s.index]).astype(jnp.float32)
+        sc = _kref.quant_scale(x, qmax)
+        scales.append(sc)
+        codes.append(_kref.quantize(x, sc, qmax))
+    if chunk.quant == "int4":
+        codes = [_nibble_pack(c) for c in codes]
+    payload = codes[0] if len(codes) == 1 else jnp.concatenate(codes)
+    return payload, jnp.stack(scales)
+
+
+def quant_unpack_flat(chunk: FlatChunk, payload, scales, leading=()) -> dict:
+    """Dequantize a (possibly gathered: ``leading=(W,)``) quantized payload
+    back into ``{slot.index: array}`` with original shapes/dtypes."""
+    out, poff = {}, 0
+    for k, s in enumerate(chunk.slots):
+        psz = (s.size + 1) // 2 if chunk.quant == "int4" else s.size
+        piece = jax.lax.slice_in_dim(payload, poff, poff + psz, axis=-1)
+        poff += psz
+        if chunk.quant == "int4":
+            piece = _nibble_unpack(piece, s.size)
+        sc = scales[..., k]
+        x = piece.astype(jnp.float32) * sc[..., None]
+        out[s.index] = x.reshape(tuple(leading) + s.shape).astype(s.dtype)
+    return out
+
+
+def quant_dequant_flat(chunk: FlatChunk, parts) -> jax.Array:
+    """Local quantize→dequantize of a quantized chunk as one float32 wire
+    buffer — the all-reduce path's widened accumulator.  The reduced buffer
+    is laid out exactly like an unquantized chunk, so :func:`unpack_flat`
+    splits it."""
+    from repro.kernels import ref as _kref
+    qmax = QUANT_QMAX[chunk.quant]
+    outs = []
+    for s in chunk.slots:
+        x = jnp.ravel(parts[s.index]).astype(jnp.float32)
+        sc = _kref.quant_scale(x, qmax)
+        outs.append(_kref.dequantize(_kref.quantize(x, sc, qmax), sc))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
 
 
 def compressed_floats(shape: Tuple[int, ...], spec: MatrixSpec, rank: int) -> int:

@@ -170,7 +170,8 @@ class PowerSGDConfig:
     dtype: Any = jnp.float32
     bucketing: str = "auto"                # "auto"/"on" = batched engine | "off" = per-leaf
     bucket_pad_tolerance: float = 0.25     # max relative padding waste per bucket
-    wire_dtype: str = "auto"               # fused-collective wire policy ("auto"|"float32"|"bfloat16")
+    wire_dtype: str = "auto"               # fused-collective wire policy
+    #                                        ("auto"|"float32"|"bfloat16"|"int8"|"int4")
     max_chunk_bytes: Optional[int] = None  # cap per fused wire buffer
     track_residual: bool = False           # emit ‖M − P̂Qᵀ‖/‖M‖ metrics
     #                                        (CompressOut.metrics; required by

@@ -10,6 +10,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ef_apply as _ef
 from repro.kernels import lowrank as _lr
+from repro.kernels import quant as _quant
+from repro.kernels import ref as _ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
@@ -31,6 +33,29 @@ def lowrank_backproject(m, p_hat, block_n=_lr.DEFAULT_BLOCK_N,
 def ef_apply(x, mom, p_hat, q, lr, lam, **kw):
     """Fused decompress + momentum + param update for one matrix."""
     return _ef.ef_apply(x, mom, p_hat, q, lr, lam, **kw)
+
+
+def nibble_pack(q, *, use_pallas=None, interpret=None):
+    """Pack flat int4 codes two-per-byte (ISSUE 9 wire format).
+
+    Routes to the Pallas kernel on accelerators and to the pure-jnp
+    reference on CPU/test substrates (the reference is also vmap-safe, which
+    the SimMesh W-worker substrate relies on).  The two paths are pinned
+    bit-identical by ``tests/test_wire_quant.py``."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() != "cpu"
+    if use_pallas:
+        return _quant.nibble_pack(q, interpret=interpret)
+    return _ref.nibble_pack(q)
+
+
+def nibble_unpack(packed, n, *, use_pallas=None, interpret=None):
+    """Inverse of :func:`nibble_pack` — same Pallas/reference routing."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() != "cpu"
+    if use_pallas:
+        return _quant.nibble_unpack(packed, n, interpret=interpret)
+    return _ref.nibble_unpack(packed, n)
 
 
 def ef_apply_tree(params, agg, momentum_state, *, lr, momentum):

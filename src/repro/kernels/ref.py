@@ -37,3 +37,60 @@ def ef_apply(x, mom, p_hat, q, lr, lam):
     new_mom = lam * mom + delta
     new_x = x - lr * (delta + new_mom)
     return new_x, new_mom
+
+
+# ---------------------------------------------------------------------------
+# quantized wire formats (ISSUE 9): symmetric scale + int4 nibble packing
+# ---------------------------------------------------------------------------
+
+def quant_scale(x, qmax):
+    """Symmetric per-array quantization scale: max|x| / qmax.
+
+    Zero-guarded: an all-zero array gets scale 1.0 so quantize/dequantize
+    stay finite (the payload is all zeros either way)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return jnp.where(absmax > 0, absmax / qmax, jnp.float32(1.0))
+
+
+def quantize(x, scale, qmax):
+    """round-to-nearest symmetric quantization → int8 codes in [-qmax, qmax].
+
+    With ``scale = max|x|/qmax`` no input lands outside the code range, so
+    the clip is a guard, not a bias source, and the elementwise error is
+    bounded by scale/2."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    """Inverse of :func:`quantize`: codes × scale."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def nibble_pack(q):
+    """Pack int4 codes (int8 values in [-8, 7], flat) two-per-byte.
+
+    Even indices go to the low nibble, odd indices to the high nibble; an
+    odd-length tail is padded with one zero code.  Returns uint8 of length
+    ceil(n/2)."""
+    n = q.shape[-1]
+    half = (n + 1) // 2
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, 2 * half - n)])
+    u = qp.astype(jnp.uint8) & 0xF            # two's-complement nibble
+    lo = u[..., 0::2]
+    hi = u[..., 1::2]
+    return lo | (hi << 4)
+
+
+def nibble_unpack(packed, n):
+    """Inverse of :func:`nibble_pack`: uint8 bytes → n int4 codes (int8).
+
+    Sign-extends each nibble (codes ≥ 8 map to code − 16) and drops the
+    padding code when ``n`` is odd."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    inter = jnp.stack([lo, hi], axis=-1).reshape(
+        packed.shape[:-1] + (2 * packed.shape[-1],))
+    return inter[..., :n].astype(jnp.int8)

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import error_feedback
+from repro.core import error_feedback, matrixize
 from repro.core.compressors import Compressor, PowerSGDCompressor
 from repro.core.dist import MeshCtx
 from repro.core.error_feedback import EFState
@@ -45,7 +45,8 @@ class TrainHyper:
     orthogonalizer: str = "gram_schmidt"
     use_pallas: bool = False
     bucketing: str = "auto"         # "auto"/"on" = batched engine, "off" = per-leaf
-    wire_dtype: str = "auto"        # fused-collective wire policy ("auto"|"float32"|"bfloat16")
+    wire_dtype: str = "auto"        # fused-collective wire policy
+    #                                 ("auto"|"float32"|"bfloat16"|"int8"|"int4")
     start_compress_step: int = 0    # dense warmup steps before compression kicks in
     rank_schedule: Optional[str] = None  # adaptive-rank spec ("4@0,2@60",
     #   "residual:min=1,max=8", ...; see repro.core.powersgd.parse_schedule).
@@ -365,6 +366,22 @@ def make_sim_train_step(cfg: ModelConfig, sim, hyper: TrainHyper,
     return step_fn, init_state
 
 
+def check_wire_dtype_meta(meta: dict, wire_dtype: str) -> None:
+    """Resume guard: the checkpoint's recorded wire policy must match.
+
+    The wire dtype shapes the error-feedback trajectory — under a quantized
+    wire every step's quantization error lands in the EF buffers, so the
+    buffers in the envelope are only meaningful under the policy that
+    produced them.  A mismatch is a config error, not something to adapt."""
+    saved = meta.get("wire_dtype", "auto")
+    if saved != wire_dtype:
+        raise SystemExit(
+            f"--wire-dtype {wire_dtype!r} does not match the checkpoint's "
+            f"{saved!r} — the wire policy shapes the error-feedback "
+            f"trajectory (quantization error is part of the algorithm "
+            f"state); resume with the wire dtype the run was started with")
+
+
 # ---------------------------------------------------------------------------
 # CLI driver: end-to-end training of a reduced model on host devices
 # ---------------------------------------------------------------------------
@@ -395,6 +412,12 @@ def main():
                     help="'broadcast' makes every data-axis aggregate "
                          "replica-deterministic (canonical reduction order "
                          "+ rank-0 broadcast; see docs/checkpoint.md)")
+    ap.add_argument("--wire-dtype", default="auto",
+                    choices=matrixize.WIRE_DTYPES,
+                    help="fused-collective wire policy: 'auto' keeps each "
+                         "part's dtype, float32/bfloat16 cast, int8/int4 "
+                         "quantize float payloads symmetrically per slot "
+                         "(int4 nibble-packed; see docs/tuning.md)")
     ap.add_argument("--staleness", default="none",
                     choices=("none", "one_step"),
                     help="'one_step' turns on the delayed-parameter-update "
@@ -431,9 +454,11 @@ def main():
     hyper = TrainHyper(lr=args.lr, rank=args.rank, q_chunk=64,
                        warmup_steps=20, remat=False,
                        rank_schedule=args.rank_schedule,
+                       wire_dtype=args.wire_dtype,
                        sync_mode=args.sync_mode, staleness=args.staleness)
     compressor = PowerSGDCompressor(
         rank=args.rank, rank_schedule=args.rank_schedule,
+        wire_dtype=args.wire_dtype,
         pipeline=args.staleness == "one_step")
     step_fn, _, init_state = make_train_step(cfg, m, hyper,
                                              compressor=compressor)
@@ -470,6 +495,7 @@ def main():
                 f"checkpoint's {meta.get('staleness', 'none')!r} — the "
                 f"envelope does (not) carry an in-flight aggregate; resume "
                 f"with the mode the run was started with")
+        check_wire_dtype_meta(meta, args.wire_dtype)
         # re-slice stacked model-LOCAL leaves: every model rank gets its
         # own pre-save factors back (not rank-0's copy)
         with jax.set_mesh(m):
@@ -504,7 +530,8 @@ def main():
             mesh_shape={a: int(m.shape[a]) for a in m.axis_names},
             extra_meta={"rank_schedule": args.rank_schedule,
                         "arch": args.arch, "last_residual": residual,
-                        "staleness": args.staleness})
+                        "staleness": args.staleness,
+                        "wire_dtype": args.wire_dtype})
         return path
 
     t0 = time.time()

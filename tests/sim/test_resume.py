@@ -40,13 +40,16 @@ STEPS, CKPT_AT = 8, 4
 LINEARITY_TOL = 5e-5  # f32 reassociation across the worker-mean
 
 
-def build(workers, schedule=None, sync_mode="allreduce", staleness="none"):
+def build(workers, schedule=None, sync_mode="allreduce", staleness="none",
+          wire_dtype="auto"):
     """A fresh "process": new compressor, new jitted step, new controller."""
     cfg = get_config("llama3-8b", reduced=True)
     hyper = TrainHyper(q_chunk=32, warmup_steps=5, remat=False,
                        weight_decay=0.0, rank_schedule=schedule,
+                       wire_dtype=wire_dtype,
                        sync_mode=sync_mode, staleness=staleness)
     compressor = PowerSGDCompressor(rank=2, rank_schedule=schedule,
+                                    wire_dtype=wire_dtype,
                                     pipeline=staleness == "one_step")
     sim = SimMesh(workers)
     step_fn, init_state = make_sim_train_step(cfg, sim, hyper,
@@ -77,20 +80,22 @@ def run(cfg, sim, step_fn, params, ef, controller, start, steps,
 
 
 def save_at(tmpdir, sim, params, ef, controller=None, schedule=None,
-            residual=None):
+            residual=None, wire_dtype="auto"):
     p, e = canonicalize_sim(sim, params, ef)
     return save_train_state(
         str(tmpdir), TrainState(params=p, ef=e, key=KEY,
                                 data_step=jnp.asarray(e.step)),
         controller=controller,
-        extra_meta={"rank_schedule": schedule, "last_residual": residual})
+        extra_meta={"rank_schedule": schedule, "last_residual": residual,
+                    "wire_dtype": wire_dtype})
 
 
 def restore_into(tmpdir, workers, schedule=None, sync_mode="allreduce",
-                 staleness="none"):
+                 staleness="none", wire_dtype="auto"):
     """The resumed process: rebuild from config, restore, re-replicate."""
     cfg, sim, step_fn, init_state, controller = build(workers, schedule,
-                                                      sync_mode, staleness)
+                                                      sync_mode, staleness,
+                                                      wire_dtype)
     p0, e0 = init_state(KEY)
     template = TrainState(*canonicalize_sim(sim, p0, e0), key=KEY,
                           data_step=jnp.zeros((), jnp.int32))
@@ -334,6 +339,65 @@ def test_one_step_envelope_into_sync_template_drops(tmp_path):
     params, ef, tail = run(cfg, sim, step_fn, params, ef, None,
                            CKPT_AT, CKPT_AT + 2)
     assert all(np.isfinite(x) for x in tail), tail
+
+
+def test_resume_bit_exact_int4_wire(tmp_path):
+    """ISSUE 9 satellite: save → kill → resume under ``wire_dtype="int4"``
+    is bit-exact.  Quantization error flows into the EF buffers every step,
+    so the quantized trajectory is part of the algorithm state — a resumed
+    process must replay the exact same quantize/dequantize decisions."""
+    w = 4
+    cfg, sim, step_fn, init_state, _ = build(w, wire_dtype="int4")
+    params, ef = init_state(KEY)
+    params, ef, ref_losses = run(cfg, sim, step_fn, params, ef, None,
+                                 0, STEPS)
+    ref_params = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
+
+    cfg, sim, step_fn, init_state, _ = build(w, wire_dtype="int4")
+    params, ef = init_state(KEY)
+    params, ef, head = run(cfg, sim, step_fn, params, ef, None, 0, CKPT_AT)
+    assert head == ref_losses[:CKPT_AT]
+    save_at(tmp_path, sim, params, ef, wire_dtype="int4")
+
+    cfg, sim, step_fn, _, params, ef, meta = restore_into(
+        tmp_path, w, wire_dtype="int4")
+    assert meta["wire_dtype"] == "int4"
+    params, ef, tail = run(cfg, sim, step_fn, params, ef, None,
+                           CKPT_AT, STEPS)
+    assert tail == ref_losses[CKPT_AT:], (tail, ref_losses[CKPT_AT:])
+    got = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), params)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(ref_params)):
+        np.testing.assert_array_equal(a, b)
+    # the quantized trajectory must actually differ from the float one —
+    # otherwise this test would pass vacuously
+    cfg, sim, step_fn, init_state, _ = build(w)
+    params, ef = init_state(KEY)
+    _, _, float_losses = run(cfg, sim, step_fn, params, ef, None, 0, STEPS)
+    assert float_losses != ref_losses
+
+
+def test_resume_mismatched_wire_dtype_rejected(tmp_path):
+    """Restoring under a different ``--wire-dtype`` must fail with a clear
+    error naming both policies (the CLI's resume guard)."""
+    from repro.launch.train import check_wire_dtype_meta
+
+    w = 1
+    cfg, sim, step_fn, init_state, _ = build(w, wire_dtype="int4")
+    params, ef = init_state(KEY)
+    params, ef, _ = run(cfg, sim, step_fn, params, ef, None, 0, 1)
+    save_at(tmp_path, sim, params, ef, wire_dtype="int4")
+    _, _, _, _, _, _, meta = restore_into(tmp_path, w, wire_dtype="int4")
+
+    with pytest.raises(SystemExit) as exc:
+        check_wire_dtype_meta(meta, "float32")
+    msg = str(exc.value)
+    assert "'float32'" in msg and "'int4'" in msg and "wire" in msg
+    check_wire_dtype_meta(meta, "int4")  # matching policy passes
+    # legacy envelopes without the key imply the default policy
+    check_wire_dtype_meta({}, "auto")
+    with pytest.raises(SystemExit):
+        check_wire_dtype_meta({}, "int8")
 
 
 def test_truncated_sim_checkpoint_rejected(tmp_path):

@@ -154,6 +154,93 @@ def test_gather_combine_matches_weighted_reference(name):
                                    err_msg=k)
 
 
+# ---------------------------------------------------------------------------
+# quantized wire formats (ISSUE 9): budgets unchanged, loss envelope pinned
+# ---------------------------------------------------------------------------
+
+# per-leaf relative-error envelope of the quantized wire vs float32 wire:
+# one quantization is ≤ 1/(2·qmax) relative per slot; powersgd quantizes
+# BOTH factor phases (errors compound through P·Qᵀ), hence the headroom.
+QUANT_REL_TOL = {"int8": 0.05, "int4": 0.5}
+QUANT_SCHEMES = ["powersgd", "sign_norm", "top_k"]
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+@pytest.mark.parametrize("wd", ["int8", "int4"])
+@pytest.mark.parametrize("name", QUANT_SCHEMES)
+def test_quantized_wire_budget_and_envelope(name, wd, workers):
+    """Quantized wire must not change the transport's shape: exactly the
+    documented collective count and reduce/gather split (the scale sidecar
+    rides its payload's collective, it never adds one), gather fanout still
+    W — and the aggregate stays inside the pinned tolerance of the float32
+    wire (error feedback absorbs what is left)."""
+    grads, specs, shapes = _mixed_tree(workers)
+    sim = SimMesh(workers)
+    stats = CollectiveStats()
+    q_agg, _, _, _ = _run(make_compressor(name, rank=2, wire_dtype=wd),
+                          grads, specs, shapes, sim, stats=stats)
+    total, n_reduce, n_gather = ZOO_BUDGETS[name]
+    assert stats.data_collectives == total, (name, wd, stats.kinds)
+    assert stats.reduce_collectives == n_reduce, (name, wd, stats.kinds)
+    assert stats.gather_collectives == n_gather, (name, wd, stats.kinds)
+    for kind, fanout in zip(stats.kinds, stats.fanouts):
+        assert fanout == (workers if kind == "gather" else 1)
+    # quantized payload records carry the sub-byte itemsize + scale sidecar
+    q_records = [(i, o) for i, o in zip(stats.itemsizes, stats.overheads)
+                 if o > 0]
+    assert q_records, (name, wd, stats.itemsizes, stats.overheads)
+    assert all(i == (1 if wd == "int8" else 0.5) for i, _ in q_records)
+
+    f_agg, _, _, _ = _run(make_compressor(name, rank=2, wire_dtype="auto"),
+                          grads, specs, shapes, sim)
+    sim.assert_replicated(q_agg, f"{name}/{wd} agg")
+    for k in grads:
+        a, b = np.asarray(q_agg[k]), np.asarray(f_agg[k])
+        rel = np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12)
+        assert rel <= QUANT_REL_TOL[wd], (name, wd, k, rel)
+
+
+@pytest.mark.parametrize("wd", ["int8", "int4"])
+def test_quantized_wire_integer_payloads_exact(wd):
+    """Integer payload parts (top_k's i32 indices, sign_norm's i8 signs)
+    never quantize: with per-worker-identical norms/values the schemes'
+    discrete selections must be bit-identical to the float32 wire."""
+    W = 4
+    grads, specs, shapes = _mixed_tree(1)
+    grads = {k: jnp.broadcast_to(v, (W,) + v.shape[1:]) for k, v in
+             grads.items()}
+    sim = SimMesh(W)
+    a, _, _, _ = _run(make_compressor("top_k", rank=2, wire_dtype=wd),
+                      grads, specs, shapes, sim)
+    b, _, _, _ = _run(make_compressor("top_k", rank=2, wire_dtype="auto"),
+                      grads, specs, shapes, sim)
+    for k in grads:
+        qa, fb = np.asarray(a[k]), np.asarray(b[k])
+        # identical support: quantization rescales surviving values but must
+        # not move which coordinates survive
+        np.testing.assert_array_equal(qa != 0, fb != 0, err_msg=k)
+
+
+@pytest.mark.parametrize("wd", ["int8", "int4"])
+@pytest.mark.parametrize("name", QUANT_SCHEMES)
+def test_quantized_wire_lemma3_linearity(name, wd):
+    """Lemma-3 linearity under quantized wire: quantization happens per
+    worker *before* the combine and the combine stays the exact linear mean
+    of the dequantized payloads — so W workers holding identical gradients
+    must reproduce the single-worker aggregate bit-for-bit (any
+    nonlinearity in the combine would break this)."""
+    W = 4
+    g1, specs, shapes = _mixed_tree(1)
+    gW = {k: jnp.broadcast_to(v, (W,) + v.shape[1:]) for k, v in g1.items()}
+    a1, _, _, _ = _run(make_compressor(name, rank=2, wire_dtype=wd),
+                       g1, specs, shapes, SimMesh(1))
+    aW, _, _, _ = _run(make_compressor(name, rank=2, wire_dtype=wd),
+                       gW, specs, shapes, SimMesh(W))
+    for k in g1:
+        np.testing.assert_array_equal(np.asarray(aW[k])[:1],
+                                      np.asarray(a1[k]), err_msg=(name, wd, k))
+
+
 def test_gather_payload_bytes_scale_with_workers():
     """The satellite fix: non-linear schemes' recorded traffic must be the
     W-scaled gather payload, not a dense all-reduce.  sign_norm's sign

@@ -222,5 +222,57 @@ def test_apply_plan_installs_ranks_and_budget_guard_holds():
     assert stats.gather_collectives == 0
     assert out.bits_per_worker == plan.bits_per_step
     # explicit wire dtype ⇒ the chunks actually travel at that itemsize
-    assert set(stats.itemsizes) == \
-        {2 if plan.wire_dtype == "bfloat16" else 4}
+    want = {"float32": 4, "bfloat16": 2, "int8": 1, "int4": 0.5}
+    assert set(stats.itemsizes) == {want[plan.wire_dtype]}
+
+
+# ---------------------------------------------------------------------------
+# quantized wire pricing (ISSUE 9): one budget buys rank OR precision
+# ---------------------------------------------------------------------------
+
+def test_quantized_wire_trades_precision_for_rank():
+    """The acceptance case: under a tight bits budget the joint
+    (rank, wire_dtype) walk must land on a configuration a rank-only walk
+    cannot reach — int4 re-prices every payload float at 4 bits, so the
+    same budget affords 8× the tracked directions."""
+    shapes, specs = _tree()
+    tight = _budget(shapes, specs, 1)  # one rank-1 float32 step's bits
+    rank_only = autotune.autotune(shapes, specs, bits_budget=tight,
+                                  workers=8, wire_dtypes=("float32",))
+    joint = autotune.autotune(shapes, specs, bits_budget=tight, workers=8,
+                              wire_dtypes=("float32", "int4"))
+    # the rank-only walk is pinned to rank 1 everywhere by this budget
+    assert all(d.rank == 1 for d in rank_only.decisions)
+    assert joint.wire_dtype == "int4"
+    assert joint.payload_floats > rank_only.payload_floats
+    assert (max(d.rank for d in joint.decisions)
+            > max(d.rank for d in rank_only.decisions))
+    # and the honest wire accounting still beats the float32 plan: more
+    # directions AND fewer bits on the wire
+    assert joint.wire_bits_per_step < rank_only.wire_bits_per_step
+    # paper-convention bits reflect the extra floats; the honest field is new
+    assert joint.bits_per_step == (joint.payload_floats
+                                   + joint.uncompressed_floats) * 32
+
+
+def test_quantized_wire_budget_scaling_monotone():
+    """int8 buys 4× and int4 8× the float32 budget floats — payload floats
+    under one fixed budget must be monotone in the wire width."""
+    shapes, specs = _tree()
+    tight = _budget(shapes, specs, 1)
+    pays = {}
+    for wd in ("float32", "int8", "int4"):
+        plan = autotune.autotune(shapes, specs, bits_budget=tight, workers=8,
+                                 wire_dtypes=(wd,))
+        assert plan.wire_dtype == wd
+        pays[wd] = plan.payload_floats
+    assert pays["float32"] < pays["int8"] <= pays["int4"]
+
+
+def test_comm_time_from_stats_prices_scale_sidecar():
+    """Fractional itemsizes and overhead bytes flow into the α-β model."""
+    hw = autotune.HardwareModel.from_backend("nccl_10gbit")
+    stats = CollectiveStats()
+    stats.record(1000, itemsize=0.5, kind="reduce", overhead=8)
+    want = hw.collective_time(508, 8, "reduce")
+    assert autotune.comm_time_from_stats(stats, 8, hw) == pytest.approx(want)

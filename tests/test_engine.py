@@ -226,6 +226,38 @@ def test_collective_budget_never_exceeded(name, comp, budget):
         assert stats.gather_collectives == 0, name
 
 
+def test_quantized_wire_bytes_ratio_pinned():
+    """Regression guard for honest fractional byte accounting (ISSUE 9):
+    the same powersgd step under ``wire_dtype="int4"`` must record ~0.5
+    bytes/element plus the scale sidecar — an 8× wire-byte reduction over
+    float32 (int8: 4×), NOT a silently-rounded 1 byte/element — while the
+    2-collective budget stays untouched."""
+    grads, specs, shapes = _model_tree(6)
+
+    def run(wd):
+        c = PowerSGDCompressor(rank=2, wire_dtype=wd)
+        stats = CollectiveStats()
+        c.step(grads, c.init(shapes, specs, KEY), specs,
+               ctx=MeshCtx(stats=stats), key=KEY)
+        assert stats.data_collectives == 2, (wd, stats.kinds)
+        return stats
+
+    f32, i8, i4 = run("float32"), run("int8"), run("int4")
+    assert f32.sizes == i8.sizes == i4.sizes  # same payload elements
+    f32_b, i8_b, i4_b = (sum(s.bytes_per_collective())
+                         for s in (f32, i8, i4))
+    n = sum(f32.sizes)
+    assert f32_b == 4 * n and f32.overheads == [0, 0]
+    # exact: payload at the fractional itemsize + one f32 scale per slot
+    assert i8_b == n + sum(i8.overheads)
+    assert i4_b == 0.5 * n + sum(i4.overheads)
+    assert all(o > 0 for o in i4.overheads)
+    # ratio bounds: the ideal 4×/8× shaved by the scale sidecar (this tiny
+    # tree has ~5% sidecar overhead; real models amortize it to <1%)
+    assert 3.5 <= f32_b / i8_b <= 4.0
+    assert 6.5 <= f32_b / i4_b <= 8.0
+
+
 # ---------------------------------------------------------------------------
 # PipelinedTransport: double-buffered chunk schedule (ISSUE 8)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,30 @@
+"""gradlint — jaxpr-level static invariant analysis for the transport stack.
+
+Every load-bearing invariant of the fused-collective engine (the O(1)
+per-step collective budget that is the paper's headline property, wire-dtype
+discipline, replica determinism, per-leaf partition classification, retrace
+stability) is visible in the traced jaxpr or the source AST without
+executing a single step.  This package checks them there:
+
+* :mod:`repro.analysis.findings` — rule catalog, :class:`Finding` /
+  :class:`Report` (machine-readable, jax-free),
+* :mod:`repro.analysis.tracing` — device-free step tracing
+  (``jax.make_jaxpr`` + ``axis_env``), collective extraction with
+  source provenance, stable jaxpr hashing,
+* :mod:`repro.analysis.passes` — the jaxpr passes: collective-budget,
+  wire-dtype discipline, determinism,
+* :mod:`repro.analysis.partition` — partition-consistency and
+  retrace-stability passes,
+* :mod:`repro.analysis.astlint` — the source-AST rules (importable and
+  runnable without jax installed),
+* :mod:`repro.analysis.lint` — the CLI:
+  ``python -m repro.analysis.lint [--config ARCH | --ast-only | ...]``.
+
+Import note: this ``__init__`` must stay importable without jax so the
+jax-free docs CI job can run ``lint --ast-only`` — anything that needs jax
+is imported lazily by the modules that use it.
+"""
+
+from repro.analysis.findings import Finding, Report, RULES
+
+__all__ = ["Finding", "Report", "RULES"]

@@ -1,0 +1,194 @@
+"""gradlint source-AST rules (GLA0x) — importable and runnable without jax.
+
+Three rules over the ``src/repro`` tree, each with a per-line escape hatch:
+a trailing ``# gradlint: disable=<rule>`` comment (rule id or kebab name,
+comma-separated for several) suppresses any rule on that line.
+
+* **GLA01 host-transfer** — ``np.asarray(...)`` / ``jax.device_get(...)``
+  anywhere outside ``checkpoint/``.  On a sharded array these read device
+  0's shard and silently drop every other rank's content (the PR 7 bug
+  class); the mesh-aware canonicalize path in ``checkpoint/`` is the one
+  sanctioned home.  Deliberate host-side sites (serving output, host-only
+  state dicts) carry an explicit disable comment — the escape hatch *is*
+  the documentation that a transfer is intentional.
+* **GLA02 prng-key-in-step** — ``jax.random.PRNGKey(...)`` or
+  ``jax.random.key(...)`` inside a step function (any enclosing ``def``
+  whose name contains a ``step`` component).  In-step key construction
+  from a constant makes every step (and every rank that retraces) reuse
+  the same stream; per-step keys must be derived with ``fold_in`` from a
+  key argument.
+* **GLA03 implicit-dtype-reduction** — ``jnp.sum/mean/prod`` without an
+  explicit ``dtype=`` in the wire-path modules (``core/matrixize.py``,
+  ``core/dist.py``), where accumulator widths decide what bytes cross the
+  wire and must never be an implicit-promotion accident (the PR 3 bug
+  class).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.findings import Finding, get_rule
+
+# modules where implicit-accumulator reductions are forbidden (GLA03)
+WIRE_PATH_MODULES = ("core/matrixize.py", "core/dist.py")
+# directory whose canonicalize paths are the sanctioned home for host
+# transfers (GLA01 does not apply there)
+HOST_TRANSFER_SANCTUARY = "checkpoint/"
+
+_DISABLE_RE = re.compile(r"#\s*gradlint:\s*disable=([\w\-,\s]+)")
+_STEP_NAME_RE = re.compile(r"(^|_)step(_|$|\d)")
+
+_REDUCTIONS = {"sum", "mean", "prod"}
+
+
+def _disabled_rules(line: str) -> set:
+    m = _DISABLE_RE.search(line)
+    if not m:
+        return set()
+    out = set()
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        try:
+            rule = get_rule(tok)
+            out.update({rule.id, rule.name})
+        except KeyError:
+            out.add(tok)
+    return out
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, rel_path: str, lines: Sequence[str]):
+        self.rel_path = rel_path
+        self.lines = lines
+        self.findings: List[Finding] = []
+        self.func_stack: List[str] = []
+        self.is_wire_path = any(rel_path.endswith(m)
+                                for m in WIRE_PATH_MODULES)
+        self.in_sanctuary = HOST_TRANSFER_SANCTUARY in rel_path
+
+    # -- helpers -----------------------------------------------------------
+    def _emit(self, rule_key: str, node: ast.AST, message: str) -> None:
+        rule = get_rule(rule_key)
+        line_no = getattr(node, "lineno", 0)
+        src_line = self.lines[line_no - 1] if 0 < line_no <= len(self.lines) \
+            else ""
+        disabled = _disabled_rules(src_line)
+        if rule.id in disabled or rule.name in disabled:
+            return
+        self.findings.append(Finding(
+            rule=rule.id, message=message, file=self.rel_path, line=line_no,
+            pass_name="ast", provenance=f"{self.rel_path}:{line_no}"))
+
+    def _in_step_function(self) -> bool:
+        # a factory that *builds* a step (make_train_step, build_step) or a
+        # tracer that *inspects* one (trace_compress_step) is host-side
+        # setup code, not the traced step body itself
+        return any(_STEP_NAME_RE.search(name)
+                   and not name.startswith(("make_", "build_", "trace_"))
+                   for name in self.func_stack)
+
+    # -- visitors ----------------------------------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.func_stack.append(node.name)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        if dotted is not None:
+            self._check_host_transfer(node, dotted)
+            self._check_prng_in_step(node, dotted)
+            self._check_implicit_reduction(node, dotted)
+        self.generic_visit(node)
+
+    # -- rules -------------------------------------------------------------
+    def _check_host_transfer(self, node: ast.Call, dotted: str) -> None:
+        if self.in_sanctuary:
+            return
+        if dotted in ("np.asarray", "numpy.asarray", "jax.device_get",
+                      "onp.asarray"):
+            self._emit(
+                "host-transfer", node,
+                f"{dotted} outside {HOST_TRANSFER_SANCTUARY}: host "
+                "transfers read device 0's shard; use the checkpoint "
+                "canonicalize path, or mark a deliberate host-side site "
+                "with '# gradlint: disable=host-transfer'")
+
+    def _check_prng_in_step(self, node: ast.Call, dotted: str) -> None:
+        if dotted not in ("jax.random.PRNGKey", "jax.random.key",
+                          "random.PRNGKey"):
+            return
+        if not self._in_step_function():
+            return
+        self._emit(
+            "prng-key-in-step", node,
+            f"{dotted} inside step function "
+            f"'{'.'.join(self.func_stack)}': construct keys outside the "
+            "step and derive per-step keys with jax.random.fold_in")
+
+    def _check_implicit_reduction(self, node: ast.Call, dotted: str) -> None:
+        if not self.is_wire_path:
+            return
+        parts = dotted.split(".")
+        if len(parts) != 2 or parts[0] not in ("jnp", "jny", "jax_numpy"):
+            return
+        if parts[1] not in _REDUCTIONS:
+            return
+        if any(kw.arg == "dtype" for kw in node.keywords):
+            return
+        self._emit(
+            "implicit-dtype-reduction", node,
+            f"{dotted} without explicit dtype= on a wire-path module: "
+            "the accumulator width prices wire bytes — spell it out")
+
+
+def lint_source(source: str, rel_path: str) -> List[Finding]:
+    """Run the AST rules over one file's source text."""
+    try:
+        tree = ast.parse(source, filename=rel_path)
+    except SyntaxError as e:  # a syntax error is its own kind of finding
+        return [Finding(rule="GLA01", message=f"unparseable file: {e}",
+                        file=rel_path, line=e.lineno or 0, pass_name="ast")]
+    visitor = _Visitor(rel_path, source.splitlines())
+    visitor.visit(tree)
+    return visitor.findings
+
+
+def lint_file(path: Path, root: Optional[Path] = None) -> List[Finding]:
+    rel = str(path.relative_to(root)) if root else str(path)
+    return lint_source(path.read_text(), rel)
+
+
+def lint_tree(root: Path,
+              exclude: Iterable[str] = ()) -> List[Finding]:
+    """Run the AST rules over every ``.py`` file under ``root``.
+
+    ``exclude`` holds path substrings to skip (relative to ``root``).
+    """
+    findings: List[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = str(path.relative_to(root))
+        if any(pat in rel for pat in exclude):
+            continue
+        findings.extend(lint_file(path, root))
+    return findings

@@ -1,0 +1,166 @@
+"""gradlint rule catalog and machine-readable findings (jax-free).
+
+A :class:`Finding` is one rule violation with enough provenance to act on:
+the rule id, severity, a human message, and where it came from — a source
+location for AST rules, a jaxpr call-chain for trace rules.  A
+:class:`Report` is an ordered collection with JSON serialization for CI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str          # stable machine id, e.g. "GL101"
+    name: str        # kebab-case slug usable in disable comments
+    severity: str    # "error" | "warning"
+    summary: str
+
+
+# The catalog.  Ids are stable; never renumber — retire instead.
+RULES: Tuple[Rule, ...] = (
+    # -- collective-budget pass (GL1xx) ------------------------------------
+    Rule("GL101", "collective-budget-exceeded", "error",
+         "more fused data-axis collectives in the traced step than the "
+         "scheme's documented budget"),
+    Rule("GL102", "static-stats-mismatch", "error",
+         "the jaxpr collective count disagrees with the CollectiveStats "
+         "trace-time records (one of the two accounting paths rotted)"),
+    Rule("GL103", "unattributed-collective", "error",
+         "a data-axis collective primitive whose call chain does not pass "
+         "through a repro.core.dist entry point (hand-rolled collective)"),
+    Rule("GL104", "budget-shortfall", "warning",
+         "fewer collectives than the documented budget — the budget table "
+         "or the scheme changed without the other"),
+    # -- wire-dtype pass (GL2xx) -------------------------------------------
+    Rule("GL201", "wire-upcast-before-collective", "error",
+         "a float payload is widened (convert_element_type to a wider "
+         "float) on the pack path feeding a collective — the PR 3 "
+         "mixed-dtype upcast bug class"),
+    Rule("GL202", "unwidened-int-reduce", "error",
+         "an integer-dtype buffer reaches a data-axis psum: quantized "
+         "slots must be dequantized into a widened float accumulator "
+         "before any reduce"),
+    # -- determinism pass (GL3xx) ------------------------------------------
+    Rule("GL301", "in-trace-prng-seed", "error",
+         "a PRNG key is constructed from a constant inside the traced "
+         "step (random_seed primitive): keys must enter as arguments and "
+         "derive via fold_in"),
+    Rule("GL302", "uncertified-reduce-order", "error",
+         "under sync_mode='broadcast' a data-axis psum that is not the "
+         "masked broadcast0 delivery: reductions must use the canonical "
+         "gather + pairwise-tree order (the PR 6 drift bug class)"),
+    # -- partition-consistency pass (GL4xx) --------------------------------
+    Rule("GL401", "unclassified-state-leaf", "error",
+         "an EFState leaf with no StatePartition classification: the "
+         "checkpoint layer cannot gather/re-slice what it cannot classify "
+         "(the PR 7 bug class)"),
+    Rule("GL402", "partition-classification-mismatch", "error",
+         "a compressor-state leaf whose StatePartition disagrees with the "
+         "canonical factor_partition re-derivation"),
+    Rule("GL403", "invalid-partition-spec", "error",
+         "a StatePartition whose dims spec is inconsistent with the leaf "
+         "shape or with its model-relation classification"),
+    # -- retrace-stability pass (GL5xx) ------------------------------------
+    Rule("GL501", "retrace-instability", "error",
+         "tracing the same declared configuration twice produced different "
+         "jaxprs — trace construction is nondeterministic"),
+    Rule("GL502", "undeclared-retrace-boundary", "error",
+         "two distinct declared configurations produced the same jaxpr "
+         "hash, or a declared boundary failed to retrace"),
+    # -- AST rules (GLA0x) — runnable without jax --------------------------
+    Rule("GLA01", "host-transfer", "error",
+         "np.asarray / jax.device_get outside checkpoint/ canonicalize "
+         "paths: host transfers silently read device 0's shard (annotate "
+         "deliberate host-side sites with '# gradlint: disable=host-transfer')"),
+    Rule("GLA02", "prng-key-in-step", "error",
+         "jax.random.PRNGKey/key construction inside a step function: "
+         "derive per-step keys with fold_in from a key argument"),
+    Rule("GLA03", "implicit-dtype-reduction", "error",
+         "jnp.sum/mean/prod without an explicit dtype= on a wire-path "
+         "module: accumulator dtype must be deliberate where payload "
+         "bytes are priced"),
+)
+
+RULES_BY_ID = {r.id: r for r in RULES}
+RULES_BY_NAME = {r.name: r for r in RULES}
+
+
+def get_rule(key: str) -> Rule:
+    try:
+        return RULES_BY_ID.get(key) or RULES_BY_NAME[key]
+    except KeyError:
+        raise KeyError(f"unknown gradlint rule {key!r}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``provenance`` is the best machine-usable origin available: for AST
+    rules ``file:line``; for jaxpr rules the innermost-to-outermost
+    repro call chain of the offending equation (``dist.py:all_gather <-
+    dist.py:allgather_flat <- ...``) plus the primitive name.
+    """
+
+    rule: str                 # rule id ("GL101")
+    message: str
+    provenance: str = ""
+    file: Optional[str] = None
+    line: Optional[int] = None
+    pass_name: str = ""
+
+    @property
+    def rule_name(self) -> str:
+        return RULES_BY_ID[self.rule].name
+
+    @property
+    def severity(self) -> str:
+        return RULES_BY_ID[self.rule].severity
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "name": self.rule_name,
+            "severity": self.severity,
+            "message": self.message,
+            "provenance": self.provenance,
+            "file": self.file,
+            "line": self.line,
+            "pass": self.pass_name,
+        }
+
+    def __str__(self) -> str:
+        loc = f"{self.file}:{self.line}: " if self.file else ""
+        prov = f" [{self.provenance}]" if self.provenance and not self.file \
+            else ""
+        return f"{loc}{self.rule} ({self.rule_name}): {self.message}{prov}"
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+
+    def extend(self, findings: Sequence[Finding]) -> "Report":
+        self.findings.extend(findings)
+        return self
+
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def by_rule(self, key: str) -> List[Finding]:
+        rule = get_rule(key)
+        return [f for f in self.findings if f.rule == rule.id]
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps([f.to_dict() for f in self.findings],
+                          indent=indent)
+
+    def summary(self) -> str:
+        n_err = len(self.errors())
+        n_warn = len(self.findings) - n_err
+        return f"{n_err} error(s), {n_warn} warning(s)"

@@ -1,0 +1,242 @@
+"""gradlint CLI — ``python -m repro.analysis.lint``.
+
+Modes (composable; default = ``--matrix --ast``):
+
+* ``--matrix`` — statically verify the documented per-scheme collective
+  budgets for every zoo scheme × wire dtype × staleness mode on the
+  canonical mixed gradient tree, plus wire-dtype and determinism passes on
+  each trace and a broadcast-mode determinism trace per scheme.  No step
+  is ever executed; everything comes from ``jax.make_jaxpr`` under an
+  ``axis_env``.
+* ``--config ARCH`` — run the partition-consistency pass on ARCH's full
+  EF-SGD state (eval_shape only), the jaxpr passes on its traced
+  compress step, and the retrace-stability pass across a rank staircase.
+  Repeatable; ``--config all`` covers the whole registry.
+* ``--ast`` / ``--ast-only`` — the source-AST rules over ``src/repro``
+  (``--ast-only`` never imports jax, so it runs in the jax-free docs CI
+  job).
+
+``--json`` emits machine-readable findings; exit status is 1 iff any
+error-severity finding was produced.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.findings import Report
+
+# the zoo × wire × staleness budget matrix (ISSUE acceptance criteria)
+ZOO_SCHEMES = (
+    "identity", "powersgd", "powersgd_cold", "powersgd_best_approx",
+    "unbiased_rank_k", "random_block", "random_k", "sign_norm", "top_k",
+    "spectral_atomo", "exact_rank_k",
+)
+WIRE_DTYPES = ("float32", "bfloat16", "int8", "int4")
+STALENESS_MODES = ("none", "one_step")
+
+
+def _mixed_tree():
+    """The canonical mixed gradient tree the budget table is documented on
+    (matrices incl. a stacked one + conv + uncompressed vectors) — the same
+    shape family as the zoo conformance suite."""
+    import jax.numpy as jnp
+    from repro.core import matrixize
+
+    grads = {
+        "w1": jnp.zeros((24, 16)),
+        "conv": jnp.zeros((8, 4, 3, 3)),
+        "stack": jnp.zeros((3, 12, 6)),
+        "bias": jnp.zeros((7,)),
+        "scale": jnp.zeros((5,)),
+    }
+    specs = {
+        "w1": matrixize.MatrixSpec("matrix", 0),
+        "conv": matrixize.MatrixSpec("conv", 0),
+        "stack": matrixize.MatrixSpec("matrix", 1),
+        "bias": matrixize.NONE,
+        "scale": matrixize.NONE,
+    }
+    return grads, specs
+
+
+def make_zoo_compressor(scheme: str, wire_dtype: str, staleness: str,
+                        rank: int = 2):
+    from repro.core.compressors import make_compressor
+
+    kw = {"wire_dtype": wire_dtype}
+    if scheme.startswith("powersgd"):
+        kw["pipeline"] = staleness == "one_step"
+    return make_compressor(scheme, rank=rank, **kw)
+
+
+def run_matrix(report: Report, *, schemes=ZOO_SCHEMES,
+               wire_dtypes=WIRE_DTYPES, staleness_modes=STALENESS_MODES,
+               verbose: bool = False) -> int:
+    """The full static budget matrix.  Returns the number of traces run."""
+    from repro.analysis import passes, tracing
+
+    grads, specs = _mixed_tree()
+    n = 0
+    for scheme in schemes:
+        for wd in wire_dtypes:
+            for stale in staleness_modes:
+                comp = make_zoo_compressor(scheme, wd, stale)
+                label = f"{scheme}/{wd}/{stale}"
+                art = tracing.trace_compress_step(
+                    comp, grads, specs, staleness=stale, label=label)
+                report.extend(passes.run_jaxpr_passes(
+                    art, budget=comp.declared_budget(), scheme=label))
+                n += 1
+                if verbose:
+                    print(f"  traced {label}: "
+                          f"{len(art.logical())} logical collectives")
+        # one broadcast-mode determinism trace per scheme (float32 wire):
+        # certifies the PR 6 reduce-order contract statically
+        comp = make_zoo_compressor(scheme, "float32", "none")
+        art = tracing.trace_compress_step(
+            comp, grads, specs, sync_mode="broadcast",
+            label=f"{scheme}/broadcast")
+        report.extend(passes.run_jaxpr_passes(
+            art, budget=comp.declared_budget(), scheme=f"{scheme}/broadcast"))
+        n += 1
+    return n
+
+
+def run_config(report: Report, arch: str, *, scheme: str = "powersgd",
+               wire_dtype: str = "auto", staleness: str = "none",
+               verbose: bool = False) -> None:
+    """Partition + jaxpr + retrace passes for one architecture config.
+
+    Everything is shape-level: ``jax.eval_shape`` for the model/EF state,
+    ``jax.make_jaxpr`` for the compress step — no devices, no arrays.
+    """
+    import jax
+    from repro.analysis import partition as partition_pass
+    from repro.analysis import passes, tracing
+    from repro.configs.base import get_config
+    from repro.launch import specs as specs_lib
+    from repro.models import model
+
+    cfg = get_config(arch, reduced=True)
+    params_sds = jax.eval_shape(
+        lambda: model.init(jax.random.key(0), cfg, 1))
+    param_ps = model.pspecs(cfg)
+    mspecs = model.mspecs(cfg)
+    dp_axes = ("data",)
+    mesh_axes = ("data", "model")
+
+    comp = make_zoo_compressor(scheme, wire_dtype, staleness)
+
+    # -- partition-consistency on the full EF state ------------------------
+    parts = specs_lib.ef_partition(param_ps, mspecs, dp_axes,
+                                   compressor=comp,
+                                   stateful=comp.stateful,
+                                   staleness=staleness)
+    comp_sds = jax.eval_shape(
+        lambda: comp.init(params_sds, mspecs, jax.random.key(0)))
+    from repro.core.error_feedback import EFState
+    import jax.numpy as jnp
+    ef_sds = EFState(
+        error=jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct((1,) + tuple(p.shape), p.dtype),
+            params_sds),
+        momentum=params_sds,
+        comp=comp_sds,
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        inflight=(params_sds if staleness == "one_step" else None))
+    report.extend(partition_pass.check_partition(
+        ef_sds, parts, mesh_axes=mesh_axes, label=f"{arch}:"))
+    if comp.stateful:
+        report.extend(partition_pass.check_factor_partition(
+            param_ps, mspecs, parts.comp, label=f"{arch}:"))
+
+    # -- jaxpr passes on the traced compress step --------------------------
+    label = f"{arch}/{scheme}/{wire_dtype}/{staleness}"
+    art = tracing.trace_compress_step(comp, params_sds, mspecs,
+                                      staleness=staleness, label=label)
+    report.extend(passes.run_jaxpr_passes(
+        art, budget=comp.declared_budget(), scheme=label))
+    if verbose:
+        print(f"  {label}: {len(art.logical())} logical collectives over "
+              f"{len(jax.tree_util.tree_leaves(params_sds))} leaves")
+
+    # -- retrace-stability across a rank staircase -------------------------
+    if scheme.startswith("powersgd"):
+        def build(rank):
+            c = make_zoo_compressor(scheme, wire_dtype, staleness, rank=rank)
+            return tracing.trace_compress_step(
+                c, params_sds, mspecs, staleness=staleness,
+                label=f"{arch}/rank{rank}")
+        report.extend(partition_pass.check_retrace(
+            build, [(1,), (2,), (4,)], label=f"{arch}:rank-staircase:"))
+
+
+def run_ast(report: Report, src_root: Path) -> None:
+    from repro.analysis import astlint
+
+    report.extend(astlint.lint_tree(src_root))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="gradlint: static invariant analysis for the "
+                    "PowerSGD transport stack")
+    ap.add_argument("--matrix", action="store_true",
+                    help="zoo × wire-dtype × staleness budget matrix")
+    ap.add_argument("--config", action="append", default=[],
+                    metavar="ARCH", help="analyze one architecture config "
+                    "('all' = whole registry); repeatable")
+    ap.add_argument("--scheme", default="powersgd")
+    ap.add_argument("--wire-dtype", default="auto")
+    ap.add_argument("--staleness", default="none",
+                    choices=("none", "one_step"))
+    ap.add_argument("--ast", action="store_true",
+                    help="source-AST rules over src/repro")
+    ap.add_argument("--ast-only", action="store_true",
+                    help="AST rules only — never imports jax")
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    src_root = Path(__file__).resolve().parents[2]  # .../src
+    report = Report()
+
+    if args.ast_only:
+        run_ast(report, src_root / "repro")
+    else:
+        do_default = not (args.matrix or args.config or args.ast)
+        if args.matrix or do_default:
+            n = run_matrix(report, verbose=args.verbose)
+            if not args.json:
+                print(f"gradlint: budget matrix — {n} traced steps "
+                      f"({len(ZOO_SCHEMES)} schemes x {len(WIRE_DTYPES)} "
+                      f"wire dtypes x {len(STALENESS_MODES)} staleness "
+                      "modes + broadcast determinism)")
+        configs = args.config
+        if configs == ["all"]:
+            from repro.configs.base import ARCH_IDS
+            configs = list(ARCH_IDS)
+        for arch in configs:
+            if not args.json:
+                print(f"gradlint: config {arch}")
+            run_config(report, arch, scheme=args.scheme,
+                       wire_dtype=args.wire_dtype, staleness=args.staleness,
+                       verbose=args.verbose)
+        if args.ast or do_default:
+            run_ast(report, src_root / "repro")
+
+    if args.json:
+        print(report.to_json())
+    else:
+        for f in report.findings:
+            print(f)
+        print(f"gradlint: {report.summary()}")
+    return 1 if report.errors() else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,144 @@
+"""gradlint partition-consistency (GL4xx) and retrace-stability (GL5xx).
+
+Both passes are device-free: state trees come from ``jax.eval_shape``,
+partitions from the same :func:`repro.launch.specs.ef_partition` derivation
+the train step and the checkpoint layer share, and retrace checks hash
+jaxprs from :mod:`repro.analysis.tracing`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.findings import Finding
+from repro.analysis import tracing
+
+
+# ---------------------------------------------------------------------------
+# partition-consistency (the PR 7 bug class)
+# ---------------------------------------------------------------------------
+
+
+def check_partition(state, partition, *, model_axis: str = "model",
+                    mesh_axes: Optional[Sequence[str]] = None,
+                    label: str = "") -> List[Finding]:
+    """Audit a state tree against its StatePartition classification.
+
+    Wraps :func:`repro.core.engine.partition_mismatches` (the structural
+    rules live in ``core/engine.py`` next to :class:`StatePartition`
+    itself) and renders its triples as findings: GL401 for unclassified
+    leaves, GL403 for specs that contradict their own classification or
+    the mesh.
+    """
+    from repro.core import engine
+
+    rule_for = {"unclassified": "GL401", "spec-rank": "GL403",
+                "unknown-axis": "GL403", "model-mismatch": "GL403"}
+    findings = []
+    for path, problem, detail in engine.partition_mismatches(
+            state, partition, model_axis=model_axis, mesh_axes=mesh_axes):
+        findings.append(Finding(
+            rule=rule_for[problem], pass_name="partition",
+            message=f"{label}{path}: {detail}",
+            provenance=f"{label}{path}"))
+    return findings
+
+
+def check_factor_partition(param_pspecs, mspecs, comp_partition,
+                           *, model_axis: str = "model",
+                           label: str = "") -> List[Finding]:
+    """Re-derive every compressor-state leaf's classification from the
+    canonical :func:`repro.core.powersgd.factor_partition` and compare
+    (GL402).  A row-parallel weight's Q factor classified as anything but
+    MODEL_LOCAL is exactly the rank-0-copy checkpoint corruption of PR 7.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.core import powersgd
+
+    findings: List[Finding] = []
+    is_p = lambda x: isinstance(x, P)
+    expected = jax.tree_util.tree_map(
+        lambda spec, ms: powersgd.factor_partition(spec, ms, model_axis),
+        param_pspecs, mspecs, is_leaf=is_p)
+
+    exp_flat = {
+        jax.tree_util.keystr(path): part
+        for path, part in jax.tree_util.tree_flatten_with_path(
+            expected, is_leaf=lambda x: x is None)[0]}
+    got_flat = {
+        jax.tree_util.keystr(path): part
+        for path, part in jax.tree_util.tree_flatten_with_path(
+            comp_partition, is_leaf=lambda x: x is None)[0]}
+
+    for path, exp in sorted(exp_flat.items()):
+        got = got_flat.get(path)
+        if exp is None and got is None:
+            continue
+        if got is None:
+            findings.append(Finding(
+                rule="GL401", pass_name="partition",
+                message=f"{label}{path}: compressed leaf has no "
+                        "StatePartition in the compressor-state tree",
+                provenance=f"{label}{path}"))
+            continue
+        if exp is None:
+            continue  # extra classification is harmless
+        if got.model != exp.model or tuple(got.spec or ()) != \
+                tuple(exp.spec or ()):
+            findings.append(Finding(
+                rule="GL402", pass_name="partition",
+                message=f"{label}{path}: classified ({got.model}, "
+                        f"{got.spec}) but factor_partition derives "
+                        f"({exp.model}, {exp.spec}) — a misclassified "
+                        "factor checkpoints the wrong ranks' bytes",
+                provenance=f"{label}{path}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# retrace-stability (GL5xx)
+# ---------------------------------------------------------------------------
+
+
+def check_retrace(trace_builder, configs: Sequence[Tuple],
+                  label: str = "") -> List[Finding]:
+    """Prove only declared boundaries retrace.
+
+    ``trace_builder(*config)`` must return a
+    :class:`~repro.analysis.tracing.TraceArtifact`; ``configs`` is the list
+    of declared configuration tuples (e.g. ``(scheme, rank)`` across a
+    RankController staircase).  Checks:
+
+    * **GL501** — tracing the same config twice yields different jaxpr
+      hashes: trace construction is nondeterministic (set-ordered buckets,
+      id-keyed dicts, ...), which breaks jit-cache reuse and makes every
+      "identical" step a silent retrace.
+    * **GL502** — two *different* declared configs collide on one hash.
+      The declared boundary (a rank transition, a staleness switch) did
+      not actually change the program — the transition is a no-op and the
+      declaration table has rotted.
+    """
+    findings: List[Finding] = []
+    seen: Dict[str, Tuple] = {}
+    for config in configs:
+        h1 = tracing.jaxpr_hash(trace_builder(*config).closed_jaxpr)
+        h2 = tracing.jaxpr_hash(trace_builder(*config).closed_jaxpr)
+        if h1 != h2:
+            findings.append(Finding(
+                rule="GL501", pass_name="retrace",
+                message=f"{label}{config}: two traces of the same declared "
+                        "config hash differently — trace construction is "
+                        "nondeterministic",
+                provenance=f"{label}{config}"))
+            continue
+        if h1 in seen and seen[h1] != config:
+            findings.append(Finding(
+                rule="GL502", pass_name="retrace",
+                message=f"{label}{config}: hashes identically to declared "
+                        f"boundary {seen[h1]} — the boundary does not "
+                        "retrace",
+                provenance=f"{label}{config}"))
+        seen.setdefault(h1, config)
+    return findings

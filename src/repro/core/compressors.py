@@ -98,6 +98,44 @@ class Compressor:
     def wire_mode(self) -> str:
         return "reduce" if self.allreduce else "gather"
 
+    #: gather schemes: the dtype census of the per-leaf payload parts on a
+    #: float-dtype-homogeneous gradient tree — ``"float"`` for anything
+    #: that follows the gradient dtype, concrete names for integer side
+    #: channels (sign bytes, top-k indices).  ``matrixize.plan_flat`` fuses
+    #: this census into wire chunks, so the chunk count — and with it the
+    #: collective budget — is a pure function of (census, wire_dtype).
+    payload_dtypes: tuple = ("float",)
+
+    def payload_wire_chunks(self) -> int:
+        """How many wire chunks :func:`matrixize.plan_flat` fuses the
+        payload census into under this compressor's ``wire_dtype``:
+        explicit float wire dtypes cast every part into one chunk; quant
+        dtypes share one code chunk across float parts but never quantize
+        integer side channels; ``auto`` keeps one chunk per dtype."""
+        census = self.payload_dtypes
+        if self.wire_dtype in ("float32", "bfloat16"):
+            return 1
+        # auto and quant wire dtypes both preserve the census: one chunk
+        # per integer dtype plus one (code) chunk for the float parts
+        n_int = len({d for d in census if d != "float"})
+        return n_int + ("float" in census)
+
+    def declared_budget(self) -> tuple:
+        """``(total, reduce, gather)`` — the documented number of fused
+        data-axis collectives one :meth:`step` issues on a gradient tree
+        whose float leaves share a single dtype (every model tree here).
+
+        This is the single source of truth behind the README budget table,
+        the ``ZOO_BUDGETS`` conformance pins, and gradlint's static
+        collective-budget pass (``repro.analysis.passes``): the paper's §3
+        scalability argument is that this number is O(1) in model size,
+        so it is a *declared* property of each scheme, not an observation.
+        """
+        if self.wire_mode == "reduce":
+            return (1, 1, 0)
+        n = self.payload_wire_chunks()
+        return (1 + n, 1, n)
+
     def init(self, shapes, specs, key):
         return None
 
@@ -260,6 +298,12 @@ class PowerSGDCompressor(Compressor):
             self.name = f"powersgd_best_approx_{num_iters}it"
         elif not warm_start:
             self.name = "powersgd_cold"
+
+    def declared_budget(self) -> tuple:
+        """One fused P reduce + one fused Q reduce per power iteration,
+        independent of model size (the paper's §3 headline property)."""
+        n = 2 * self.cfg.num_iters
+        return (n, n, 0)
 
     def controller(self, key=None) -> "powersgd.RankController":
         """A fresh host-side driver for this compressor's rank schedule
@@ -449,6 +493,7 @@ class SignNorm(_FlatSparsifier):
 
     name = "sign_norm"
     allreduce = False
+    payload_dtypes = ("int8", "float")  # sign bytes + norms
 
     def _encode_flat(self, flat, b, key):
         n = flat.shape[0]
@@ -471,6 +516,7 @@ class TopK(_FlatSparsifier):
 
     name = "top_k"
     allreduce = False
+    payload_dtypes = ("float", "int32")  # values + indices
 
     def _encode_flat(self, flat, b, key):
         vals, idx = jax.lax.top_k(jnp.abs(flat), b)

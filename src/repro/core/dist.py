@@ -760,3 +760,68 @@ class MeshCtx:
 
 
 SINGLE = MeshCtx()  # single-device context: all collectives are identities
+
+
+# ---------------------------------------------------------------------------
+# gradlint attribution contract (repro.analysis)
+# ---------------------------------------------------------------------------
+# Every data-axis collective a traced step emits must reach the wire through
+# one of these MeshCtx entry points — the static analyzer attributes each
+# collective primitive in a jaxpr to the innermost frame of its traceback
+# that names one of them, and flags any data-axis collective whose call
+# chain passes through none (a hand-rolled collective escapes both the
+# budget and the byte accounting).  Kept here, next to the entry points
+# themselves, so adding a transport path and forgetting the ledger is a
+# one-file diff review.
+
+#: jaxpr primitive names that move bytes across a named axis
+COLLECTIVE_PRIMITIVES = frozenset({
+    "psum", "pmax", "pmin", "all_gather", "ppermute", "all_to_all",
+    "reduce_scatter", "pbroadcast",
+})
+
+#: dist.py function name -> logical collective kind, matching the ``kind``
+#: each site records into :class:`CollectiveStats`.  ``issue`` is
+#: ``pmean_flat``'s per-chunk closure; ``_canonical_reduce`` is the
+#: deterministic gather+tree-sum lowering of a reduce under
+#: ``sync_mode="broadcast"`` (one all_gather primitive, kind "reduce").
+COLLECTIVE_SITES = {
+    "psum_data": "reduce",
+    "pmean_data": "reduce",
+    "pmean_flat": "reduce",
+    "issue": "reduce",
+    "_canonical_reduce": "reduce",
+    "allgather_flat": "gather",
+    "gather_data_weight": "gather",
+    "broadcast_flat": "broadcast",
+    "broadcast0": "broadcast",
+}
+
+
+def quant_sidecar_line() -> int:
+    """Source line of the scale-sidecar ``all_gather`` in
+    :meth:`MeshCtx.allgather_flat` (the ``scales = self.backend.all_gather``
+    call).  A quantized gather ships its integer payload and its float32
+    per-slot scales as two backend all_gathers but ONE logical collective —
+    the analyzer folds the primitive at this line into its payload gather.
+    Recomputed from the live source so edits to this module cannot stale it.
+    """
+    import ast as _ast
+    import functools
+    import inspect
+
+    @functools.lru_cache(maxsize=1)
+    def _find() -> int:
+        src, base = inspect.getsourcelines(MeshCtx.allgather_flat)
+        tree = _ast.parse("".join(
+            line[4:] if line.startswith("    ") else line for line in src))
+        for node in _ast.walk(tree):
+            if (isinstance(node, _ast.Assign)
+                    and isinstance(node.targets[0], _ast.Name)
+                    and node.targets[0].id == "scales"
+                    and isinstance(node.value, _ast.Call)):
+                return base + node.lineno - 1
+        raise AssertionError(
+            "gradlint: scale-sidecar all_gather not found in allgather_flat")
+
+    return _find()

@@ -419,6 +419,75 @@ def partition_leaves(partition, leaves) -> list:
     return rels
 
 
+def partition_mismatches(state, partition, model_axis: str = "model",
+                         mesh_axes=None) -> list:
+    """Structural audit of a :class:`StatePartition` tree against a state.
+
+    Returns ``(path, problem, detail)`` triples — empty when the partition
+    tree is sound.  Checked per state leaf (array or ShapeDtypeStruct):
+
+    * **classified** — a :class:`StatePartition` exists at the leaf's
+      position.  An unclassified leaf is invisible to the checkpoint
+      gather/re-slice path and silently saves rank 0's copy (the PR 7
+      corruption class).
+    * **spec-fits** — the dims spec mentions at most ``ndim`` dims and only
+      known mesh axes (when ``mesh_axes`` is given).
+    * **spec-model-consistent** — the dims spec mentions ``model_axis``
+      iff the leaf is :data:`MODEL_SHARDED`.  :data:`MODEL_LOCAL` means
+      per-rank content behind a replicated-*shaped* spec, so a model-axis
+      entry there (or on a replicated leaf) is a contradiction, and a
+      sharded leaf without one is dishonest about its bytes.
+
+    Used by gradlint's partition-consistency pass
+    (``repro.analysis.partition``) and usable by checkpoint tooling as a
+    pre-save sanity check.
+    """
+    from repro.core import powersgd as _psgd
+
+    problems = []
+    state_paths = {
+        jax.tree_util.keystr(path): leaf
+        for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]}
+    part_paths = {
+        jax.tree_util.keystr(path): part
+        for path, part in jax.tree_util.tree_flatten_with_path(
+            partition, is_leaf=lambda x: isinstance(x, StatePartition))[0]
+        if isinstance(part, StatePartition)}
+
+    for path, leaf in sorted(state_paths.items()):
+        part = part_paths.get(path)
+        if part is None:
+            problems.append((path, "unclassified",
+                             f"state leaf {getattr(leaf, 'shape', '?')} has "
+                             "no StatePartition"))
+            continue
+        entries = tuple(part.spec) if part.spec is not None else ()
+        ndim = len(getattr(leaf, "shape", ()))
+        if len(entries) > ndim:
+            problems.append((path, "spec-rank",
+                             f"spec {part.spec} names {len(entries)} dims "
+                             f"for a {ndim}-d leaf"))
+        if mesh_axes is not None:
+            for e in entries:
+                for ax in ((e,) if isinstance(e, str) else (e or ())):
+                    if ax not in mesh_axes:
+                        problems.append((path, "unknown-axis",
+                                         f"spec {part.spec} names axis "
+                                         f"{ax!r} not on the mesh "
+                                         f"{tuple(mesh_axes)}"))
+        mentions_model = any(
+            _psgd._mentions(e, model_axis) for e in entries)
+        if part.model == MODEL_SHARDED and not mentions_model:
+            problems.append((path, "model-mismatch",
+                             f"classified {MODEL_SHARDED} but spec "
+                             f"{part.spec} never carries {model_axis!r}"))
+        if part.model in (MODEL_REPLICATED, MODEL_LOCAL) and mentions_model:
+            problems.append((path, "model-mismatch",
+                             f"classified {part.model} but spec {part.spec} "
+                             f"carries {model_axis!r}"))
+    return problems
+
+
 # ---------------------------------------------------------------------------
 # MatrixPayloads: the bucketed pack/scatter plan for matrix-shaped schemes
 # ---------------------------------------------------------------------------

@@ -127,7 +127,7 @@ class SimMesh:
         import numpy as np
 
         for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-            a = np.asarray(leaf)
+            a = np.asarray(leaf)  # gradlint: disable=host-transfer
             if not (a == a[:1]).all():
                 raise AssertionError(
                     f"{what}{jax.tree_util.keystr(path)} diverges across "

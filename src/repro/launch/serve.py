@@ -184,7 +184,7 @@ def main():
         for k in range(args.gen_tokens):
             tok, cache = decode_fn(params, cache, {"tokens": tok},
                                    jnp.int32(args.prompt_len + k))
-            out.append(np.asarray(tok))
+            out.append(np.asarray(tok))  # gradlint: disable=host-transfer
         jax.block_until_ready(tok)
         t_dec = time.time() - t0
 

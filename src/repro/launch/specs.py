@@ -51,7 +51,8 @@ def _dims_partition(spec: P, model_axis: str = "model") -> StatePartition:
 
 
 def ef_partition(param_pspecs, mspecs, dp_axes: Tuple[str, ...],
-                 compressor=None, stateful: bool = True) -> EFState:
+                 compressor=None, stateful: bool = True,
+                 staleness: str = "none") -> EFState:
     """Per-leaf :class:`~repro.core.engine.StatePartition` tree for the
     whole EF-SGD state — the single source of truth the shard_map specs
     (:func:`ef_pspecs`) and the mesh-aware checkpoint path
@@ -63,7 +64,18 @@ def ef_partition(param_pspecs, mspecs, dp_axes: Tuple[str, ...],
     ``comp`` is the compressor's own :meth:`~repro.core.compressors.
     Compressor.state_partition` (PowerSGD classifies row-parallel weights'
     Q factors as model-LOCAL — per-model-rank content behind a
-    replicated-shaped spec)."""
+    replicated-shaped spec).
+
+    ``staleness="one_step"`` additionally classifies the params-shaped
+    ``inflight`` double buffer, leaf-for-leaf like the parameters it will
+    be applied to (data-replicated, model-sharded where the param is).
+    This used to be hand-patched at step-build time only, which left
+    ``EFState.inflight`` *unclassified* for every partition consumer that
+    never built a step — the checkpoint classification path
+    (:func:`repro.launch.train.train_state_partition`) returned a tree
+    with no record for the in-flight leaves, exactly the PR 7
+    unclassified-leaf bug class gradlint's partition pass exists to catch
+    (rule GL401, which surfaced this)."""
     is_p = lambda x: isinstance(x, P)
     error = jax.tree_util.tree_map(
         lambda s: _dims_partition(P(*((dp_axes,) + tuple(s)))),
@@ -76,8 +88,13 @@ def ef_partition(param_pspecs, mspecs, dp_axes: Tuple[str, ...],
         comp = powersgd.state_partition(param_pspecs, mspecs)
     else:
         comp = None
+    inflight = None
+    if staleness == "one_step":
+        inflight = jax.tree_util.tree_map(_dims_partition, param_pspecs,
+                                          is_leaf=is_p)
     return EFState(error=error, momentum=momentum, comp=comp,
-                   step=StatePartition(spec=P(), model=MODEL_REPLICATED))
+                   step=StatePartition(spec=P(), model=MODEL_REPLICATED),
+                   inflight=inflight)
 
 
 def partition_specs(partition):

@@ -135,13 +135,12 @@ def make_train_step(cfg: ModelConfig, mesh, hyper: TrainHyper,
     # replicated — see docs/checkpoint.md "state pspecs")
     state_parts = specs_lib.ef_partition(param_ps, mspec_tree, dp_axes,
                                          compressor=compressor,
-                                         stateful=compressor.stateful)
+                                         stateful=compressor.stateful,
+                                         staleness=hyper.staleness)
+    # the in-flight aggregate (staleness="one_step") is classified inside
+    # the partition tree like any other leaf — params-shaped, data-
+    # replicated, model-sharded exactly like the params it is applied to
     ef_ps = specs_lib.partition_specs(state_parts)
-    if hyper.staleness == "one_step":
-        # the in-flight aggregate is params-shaped: data-replicated,
-        # model-sharded exactly like the params it will be applied to
-        ef_ps = EFState(error=ef_ps.error, momentum=ef_ps.momentum,
-                        comp=ef_ps.comp, step=ef_ps.step, inflight=param_ps)
     if hasattr(compressor, "bind_state_partition"):
         compressor.bind_state_partition(state_parts.comp)
 
@@ -249,18 +248,23 @@ def _ef_in_specs(ef_ps: EFState):
 
 
 def train_state_partition(cfg: ModelConfig, mesh,
-                          compressor: Optional[Compressor] = None) -> EFState:
+                          compressor: Optional[Compressor] = None,
+                          staleness: str = "none") -> EFState:
     """The per-leaf :class:`~repro.core.engine.StatePartition` tree a
     driver hands to ``repro.checkpoint.canonicalize_mesh`` /
     ``replicate_mesh`` / ``stack_model_template`` — the same derivation
     :func:`make_train_step` binds into the engine, recomputed standalone so
     checkpoint tooling (and a restoring process that hasn't built a step
-    yet) can classify leaves without tracing anything."""
+    yet) can classify leaves without tracing anything.  Pass the run's
+    ``staleness`` so a one-step-stale state's ``inflight`` leaves are
+    classified too (an EFState with more leaves than its partition tree
+    fails gradlint's GL401)."""
     if compressor is None:
         compressor = PowerSGDCompressor()
     return specs_lib.ef_partition(
         model.pspecs(cfg), model.mspecs(cfg), mesh_lib.data_axes(mesh),
-        compressor=compressor, stateful=compressor.stateful)
+        compressor=compressor, stateful=compressor.stateful,
+        staleness=staleness)
 
 
 # ---------------------------------------------------------------------------
@@ -466,7 +470,8 @@ def main():
                   if compressor.rank_schedule is not None else None)
     # per-leaf state partition: which checkpoint leaves are model-LOCAL
     # (per-model-rank Q factors) and must be gathered/re-sliced per rank
-    parts = train_state_partition(cfg, m, compressor)
+    parts = train_state_partition(cfg, m, compressor,
+                                  staleness=args.staleness)
     model_size = int(m.shape["model"])
 
     key = jax.random.key(0)   # base key; per-step keys fold in the step index

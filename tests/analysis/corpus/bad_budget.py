@@ -1,0 +1,30 @@
+"""gradlint corpus: GL101 collective-budget-exceeded.
+
+A compress step that reduces twice against a documented budget of one
+fused collective — the O(1)-collectives property of the paper's Section 3
+scalability argument has silently regressed.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import tracing
+from repro.core.dist import CollectiveStats, MeshCtx
+
+RULE = "GL101"
+PASS = "budget"
+
+
+def build():
+    stats = CollectiveStats()
+    ctx = MeshCtx(data_axes=("data",), stats=stats)
+
+    def compress(g):
+        # BUG: a second fused reduce sneaks in (e.g. a stats/debug path
+        # that went to the wire) against a declared budget of 1
+        agg = ctx.pmean_flat([g])[0]
+        return ctx.pmean_flat([agg * agg])[0]
+
+    g = jax.ShapeDtypeStruct((64,), jnp.float32)
+    art = tracing.trace_fn(compress, (g,), stats=stats, label="bad_budget")
+    return art, (1, 1, 0)

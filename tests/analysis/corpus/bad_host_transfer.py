@@ -1,0 +1,18 @@
+"""gradlint corpus: GLA01 host-transfer.
+
+``np.asarray`` on (possibly sharded) device values outside ``checkpoint/``
+reads device 0's shard and silently drops every other rank's content.
+Linted as if it lived at ``REL_PATH``; never imported by the tests.
+"""
+
+import numpy as np
+
+RULE = "GLA01"
+PASS = "ast"
+REL_PATH = "launch/metrics.py"
+
+
+def summarize(tree_leaf):
+    # BUG: host transfer outside the checkpoint canonicalize path
+    host = np.asarray(tree_leaf)
+    return float(host.mean())

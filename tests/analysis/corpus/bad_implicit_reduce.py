@@ -1,0 +1,18 @@
+"""gradlint corpus: GLA03 implicit-dtype-reduction.
+
+A ``jnp.sum`` without an explicit ``dtype=`` in a wire-path module: the
+accumulator width — and with it the bytes that cross the wire — becomes
+an implicit-promotion accident (the PR 3 bug class).  Linted as if it
+lived at ``REL_PATH`` (a wire-path module); never imported by the tests.
+"""
+
+import jax.numpy as jnp
+
+RULE = "GLA03"
+PASS = "ast"
+REL_PATH = "core/dist.py"
+
+
+def chunk_bytes(payload):
+    # BUG: accumulator dtype left to promotion rules on a wire path
+    return jnp.sum(payload) * payload.dtype.itemsize

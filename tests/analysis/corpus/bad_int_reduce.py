@@ -1,0 +1,30 @@
+"""gradlint corpus: GL202 unwidened-int-reduce.
+
+int8 sign bytes are summed over the data axis directly — at W >= 2 the
+accumulator wraps at +-127 and the aggregate is garbage.  Quantized
+payloads must dequantize into a float accumulator before any reduce (or
+ship over an all-gather, as sign_norm actually does).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import tracing
+from repro.core.dist import CollectiveStats, MeshCtx
+
+RULE = "GL202"
+PASS = "wire-dtype"
+
+
+def build():
+    stats = CollectiveStats()
+    ctx = MeshCtx(data_axes=("data",), stats=stats)
+
+    def compress(signs):
+        # BUG: integer payload straight into a psum
+        return ctx.psum_data(signs)
+
+    signs = jax.ShapeDtypeStruct((64,), jnp.int8)
+    art = tracing.trace_fn(compress, (signs,), stats=stats,
+                           label="bad_int_reduce")
+    return art, (1, 1, 0)

@@ -1,0 +1,25 @@
+"""gradlint corpus: GL403 invalid-partition-spec.
+
+A state leaf classified MODEL_REPLICATED whose dims-spec nonetheless
+shards over the model axis — the two halves of its StatePartition
+contradict each other, so the checkpoint canonicalize path and the
+shard_map specs disagree about what bytes each rank owns (the PR 7
+corruption class).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine import MODEL_REPLICATED, StatePartition
+
+RULE = "GL403"
+PASS = "partition"
+
+
+def build():
+    state = {"w": jax.ShapeDtypeStruct((4, 8), jnp.float32)}
+    # BUG: spec says model-sharded, classification says replicated
+    partition = {"w": StatePartition(spec=P(None, "model"),
+                                     model=MODEL_REPLICATED)}
+    return state, partition

@@ -1,0 +1,18 @@
+"""gradlint corpus: GLA02 prng-key-in-step.
+
+A PRNG key constructed from a constant inside a step function: every
+invocation (and every retracing rank) reuses the same stream.  Linted as
+source text only; never imported by the tests.
+"""
+
+import jax
+
+RULE = "GLA02"
+PASS = "ast"
+REL_PATH = "core/sampler.py"
+
+
+def sample_step(params, batch):
+    # BUG: constant key built inside the step body
+    key = jax.random.PRNGKey(0)
+    return jax.random.uniform(key, (4,)), params, batch

@@ -1,0 +1,37 @@
+"""gradlint corpus: GL302 uncertified-reduce-order.
+
+Inside a certified sync_mode="broadcast" step, a helper builds its own
+allreduce MeshCtx and issues a raw psum.  The result is correct in exact
+arithmetic, but the psum's reduction order is substrate-defined — the
+replicas (and SimMesh-vs-shard_map reruns) may disagree in the last ULP,
+which is exactly the drift class the PR 6 certified pattern (canonical
+all_gather + pairwise tree replay, or the masked broadcast0 delivery)
+removes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import tracing
+from repro.core.dist import CollectiveStats, MeshCtx
+
+RULE = "GL302"
+PASS = "determinism"
+
+
+def build():
+    stats = CollectiveStats()
+    synced = MeshCtx(data_axes=("data",), stats=stats,
+                     sync_mode="broadcast")
+    # BUG: a "utility" ctx that forgot the certified sync mode
+    rogue = MeshCtx(data_axes=("data",), stats=stats)
+
+    def compress(g):
+        agg = synced.pmean_flat([g])[0]
+        scale = rogue.psum_data(jnp.sum(agg, dtype=jnp.float32))
+        return agg * scale
+
+    g = jax.ShapeDtypeStruct((64,), jnp.float32)
+    art = tracing.trace_fn(compress, (g,), stats=stats,
+                           sync_mode="broadcast", label="bad_reduce_order")
+    return art, None  # budget not the point; broadcast budgets unchecked

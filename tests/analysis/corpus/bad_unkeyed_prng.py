@@ -1,0 +1,30 @@
+"""gradlint corpus: GL301 in-trace-prng-seed.
+
+A PRNG key seeded from a constant *inside* the traced step: every step
+draws the same stream, and any rank-dependent retrace desynchronizes the
+replicas.  Keys must enter as arguments and derive via fold_in.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import tracing
+from repro.core.dist import CollectiveStats, MeshCtx
+
+RULE = "GL301"
+PASS = "determinism"
+
+
+def build():
+    stats = CollectiveStats()
+    ctx = MeshCtx(data_axes=("data",), stats=stats)
+
+    def compress(g):
+        # BUG: constant seed inside the trace
+        noise = jax.random.normal(jax.random.key(0), g.shape, g.dtype)
+        return ctx.pmean_flat([g + 0.01 * noise])[0]
+
+    g = jax.ShapeDtypeStruct((64,), jnp.float32)
+    art = tracing.trace_fn(compress, (g,), stats=stats,
+                           label="bad_unkeyed_prng")
+    return art, (1, 1, 0)

@@ -1,0 +1,28 @@
+"""gradlint corpus: GL201 wire-upcast-before-collective.
+
+A bfloat16 gradient is widened to float32 *before* the fused reduce — one
+straggler cast and the whole payload rides a 4-byte wire (the PR 3 bug
+class the wire-dtype pass exists to catch).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import tracing
+from repro.core.dist import CollectiveStats, MeshCtx
+
+RULE = "GL201"
+PASS = "wire-dtype"
+
+
+def build():
+    stats = CollectiveStats()
+    ctx = MeshCtx(data_axes=("data",), stats=stats)
+
+    def compress(g):
+        # BUG: widens the bf16 payload to f32 on the pack path
+        return ctx.pmean_flat([g.astype(jnp.float32)])[0]
+
+    g = jax.ShapeDtypeStruct((64,), jnp.bfloat16)
+    art = tracing.trace_fn(compress, (g,), stats=stats, label="bad_upcast")
+    return art, (1, 1, 0)

@@ -1,0 +1,97 @@
+"""The static collective-budget matrix: every zoo scheme × wire dtype ×
+staleness mode, traced device-free, must agree three ways —
+
+  declared (``Compressor.declared_budget``)
+    == static (jaxpr collective primitives, sidecars folded)
+    == runtime accounting (``CollectiveStats``, recorded at trace time)
+
+— plus retrace-stability across the PowerSGD rank staircase.  This is the
+paper's Section 3 O(1)-collectives claim as a machine-checked property
+rather than a documented observation.
+"""
+
+import pytest
+
+from repro.analysis.findings import Report
+from repro.analysis import lint as L
+from repro.analysis import partition as partition_pass
+from repro.analysis import tracing
+
+
+@pytest.mark.parametrize("scheme", L.ZOO_SCHEMES)
+def test_budget_matrix_triple_agreement(scheme):
+    """All 4 wire dtypes × both staleness modes for one scheme, plus the
+    broadcast-mode determinism trace: zero findings means the declared
+    budget, the jaxpr ledger, and the CollectiveStats ledger all agree
+    (GL101/GL102/GL104 police the three pairwise comparisons) and no
+    wire-dtype or determinism rule fired along the way."""
+    rep = Report()
+    n = L.run_matrix(rep, schemes=(scheme,))
+    assert n == len(L.WIRE_DTYPES) * len(L.STALENESS_MODES) + 1
+    assert rep.findings == [], [str(f) for f in rep.findings]
+
+
+@pytest.mark.parametrize("wire_dtype,staleness",
+                         [("auto", "none"), ("int4", "one_step")])
+def test_declared_budget_matches_observed_counts(wire_dtype, staleness):
+    """Spot-check the agreement *numbers* (not just the absence of
+    findings): the traced logical ledger equals the declared budget
+    exactly, for a reduce scheme and a gather scheme with an integer
+    side channel."""
+    grads, specs = L._mixed_tree()
+    for scheme in ("powersgd", "sign_norm"):
+        comp = L.make_zoo_compressor(scheme, wire_dtype, staleness)
+        art = tracing.trace_compress_step(comp, grads, specs,
+                                          staleness=staleness)
+        total, n_reduce, n_gather = comp.declared_budget()
+        logical = art.logical()
+        assert len(logical) == total, (scheme, [s.provenance() for s in logical])
+        assert sum(1 for s in logical if s.kind == "reduce") == n_reduce
+        assert sum(1 for s in logical if s.kind == "gather") == n_gather
+        # the runtime accounting path recorded the same trace
+        assert art.stats.data_collectives == total, (scheme, art.stats.kinds)
+
+
+def test_one_step_pipeline_traces_identical_collectives():
+    """PR 8's trace-identity contract, statically: the one-step-stale
+    pipeline must issue byte-for-byte the same collective schedule as the
+    serial step (same primitives, kinds, dtypes, sizes, in order)."""
+    grads, specs = L._mixed_tree()
+
+    def ledger(staleness):
+        comp = L.make_zoo_compressor("powersgd", "auto", staleness)
+        art = tracing.trace_compress_step(comp, grads, specs,
+                                          staleness=staleness)
+        return [(s.primitive, s.kind, s.dtype, s.size)
+                for s in art.logical()]
+
+    assert ledger("none") == ledger("one_step")
+
+
+def test_retrace_stable_and_rank_boundaries_distinct():
+    """GL5xx on the real thing: tracing the same (scheme, rank) twice is
+    hash-stable, and each declared RankController boundary (rank 1→2→4)
+    actually changes the program."""
+    grads, specs = L._mixed_tree()
+
+    def build(rank):
+        comp = L.make_zoo_compressor("powersgd", "auto", "none", rank=rank)
+        return tracing.trace_compress_step(comp, grads, specs,
+                                           label=f"rank{rank}")
+
+    findings = partition_pass.check_retrace(build, [(1,), (2,), (4,)])
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_collapsed_rank_boundary_is_gl502():
+    """Negative control: a rank 'boundary' that never reaches the
+    compressor hashes identically and is called out as a rotted
+    declaration."""
+    grads, specs = L._mixed_tree()
+
+    def build(rank):  # BUG: drops rank on the floor
+        comp = L.make_zoo_compressor("powersgd", "auto", "none", rank=2)
+        return tracing.trace_compress_step(comp, grads, specs)
+
+    findings = partition_pass.check_retrace(build, [(2,), (4,)])
+    assert [f.rule for f in findings] == ["GL502"]

@@ -1,0 +1,103 @@
+"""Partition-consistency pass (GL4xx) against the real spec-derivation
+stack, plus the regression pin for the finding gradlint surfaced:
+``EFState.inflight`` used to be classified only by a hand-patch inside
+``make_train_step``, leaving every other partition consumer (notably the
+checkpoint classification path) with unclassified in-flight leaves.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import partition as partition_pass
+from repro.core.engine import MODEL_LOCAL, StatePartition
+from repro.core.error_feedback import EFState
+from repro.core import matrixize, powersgd
+from repro.launch import specs as specs_lib
+
+PSPECS = {
+    "w_row": P("model", None),    # row-parallel matrix -> Q is MODEL_LOCAL
+    "w_col": P(None, "model"),    # col-parallel matrix -> Q is MODEL_SHARDED
+    "bias": P(),                  # uncompressed vector
+}
+MSPECS = {
+    "w_row": matrixize.MatrixSpec("matrix", 0),
+    "w_col": matrixize.MatrixSpec("matrix", 0),
+    "bias": matrixize.NONE,
+}
+SHAPES = {
+    "w_row": jax.ShapeDtypeStruct((8, 6), jnp.float32),
+    "w_col": jax.ShapeDtypeStruct((6, 8), jnp.float32),
+    "bias": jax.ShapeDtypeStruct((5,), jnp.float32),
+}
+
+
+def _ef_state(staleness):
+    comp = jax.eval_shape(lambda: powersgd.init_state(
+        powersgd.PowerSGDConfig(rank=2), SHAPES, MSPECS,
+        jax.random.key(0)))
+    return EFState(
+        error=jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((2,) + tuple(s.shape), s.dtype),
+            SHAPES),
+        momentum=SHAPES, comp=comp,
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        inflight=SHAPES if staleness == "one_step" else None)
+
+
+@pytest.mark.parametrize("staleness", ["none", "one_step"])
+def test_ef_partition_classifies_every_leaf(staleness):
+    """The single-source-of-truth derivation covers the whole EF state —
+    including the one-step-stale in-flight buffer (the fixed finding:
+    before, ``staleness`` never reached ``ef_partition`` and inflight
+    leaves had no StatePartition record)."""
+    parts = specs_lib.ef_partition(PSPECS, MSPECS, ("data",),
+                                   staleness=staleness)
+    findings = partition_pass.check_partition(
+        _ef_state(staleness), parts, mesh_axes=("data", "model"))
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_omitting_staleness_regresses_to_gl401():
+    """Negative control for the fixed finding: derive the partition
+    without the staleness mode (the pre-fix call shape) against a
+    one-step state and the inflight leaves come back unclassified."""
+    parts = specs_lib.ef_partition(PSPECS, MSPECS, ("data",))
+    findings = partition_pass.check_partition(
+        _ef_state("one_step"), parts, mesh_axes=("data", "model"))
+    assert findings and {f.rule for f in findings} == {"GL401"}
+    assert all(".inflight" in f.message for f in findings)
+
+
+def test_factor_partition_cross_check_clean_and_detects_drift():
+    """GL402: the compressor's own state_partition agrees with the
+    canonical factor_partition derivation — and a leaf mutated to the
+    wrong model classification is caught."""
+    comp_parts = powersgd.state_partition(PSPECS, MSPECS)
+    assert partition_pass.check_factor_partition(
+        PSPECS, MSPECS, comp_parts) == []
+
+    # corrupt one leaf: pretend the col-parallel Q factor (whose m dim is
+    # model-sharded, spec P('model', None)) is model-local
+    bad = jax.tree_util.tree_map(
+        lambda p: StatePartition(spec=p.spec, model=MODEL_LOCAL)
+        if p is not None and p.spec == P("model", None) else p,
+        comp_parts,
+        is_leaf=lambda x: x is None or isinstance(x, StatePartition))
+    findings = partition_pass.check_factor_partition(PSPECS, MSPECS, bad)
+    assert findings and {f.rule for f in findings} == {"GL402"}
+
+
+@pytest.mark.slow
+def test_real_config_end_to_end_clean():
+    """The full per-config pipeline (partition + jaxpr passes + rank
+    staircase) on a real reduced architecture produces zero findings —
+    the same invocation the CI static-analysis job runs for all ten."""
+    from repro.analysis.findings import Report
+    from repro.analysis import lint as L
+
+    for staleness in ("none", "one_step"):
+        rep = Report()
+        L.run_config(rep, "qwen3_4b", staleness=staleness)
+        assert rep.findings == [], [str(f) for f in rep.findings]

@@ -215,6 +215,8 @@ def test_collective_budget_never_exceeded(name, comp, budget):
     our model trees are): under ``wire_dtype="auto"`` every extra payload
     dtype deliberately adds one chunk per phase instead of upcasting (see
     README); an explicit ``wire_dtype`` restores a single shared chunk."""
+    from repro.analysis import tracing
+
     for n_layers in (1, 6, 17):
         grads, specs, shapes = _model_tree(n_layers)
         c = comp()
@@ -224,6 +226,16 @@ def test_collective_budget_never_exceeded(name, comp, budget):
         assert stats.data_collectives <= budget, (
             name, n_layers, stats.data_collectives, stats.sizes)
         assert stats.gather_collectives == 0, name
+
+        # static cross-check (gradlint): the jaxpr of the same step holds
+        # exactly the collectives the runtime accounting recorded — if the
+        # CollectiveStats path ever under-records, the compiled program
+        # itself is the witness
+        art = tracing.trace_compress_step(c, grads, specs,
+                                          with_error_feedback=False)
+        assert len(art.logical()) == stats.data_collectives, (
+            name, n_layers, [s.provenance() for s in art.logical()])
+        assert all(s.kind == "reduce" for s in art.logical()), name
 
 
 def test_quantized_wire_bytes_ratio_pinned():
